@@ -1,0 +1,305 @@
+"""Paper-table benchmarks (Fig. 1, Tables 1/2/3/4/11, Figs. 4/6).
+
+Sizes are scaled for the CPU container (`--scale`); the structure and the
+claims being checked mirror the paper exactly. Wall-clock numbers are CPU
+(jnp reference path — linear in active tiles, so RSC's FLOPs reduction shows
+up as real time); the TPU-kernel FLOPs story lives in the roofline report.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import (LayerSpec, PlanCache, build_plan, full_plan,
+                        greedy_allocate, uniform_allocate)
+from repro.core.plan import SamplePlan
+from repro.core.rsc_spmm import spmm_apply
+from repro.graphs.datasets import DATASETS, load_dataset
+from repro.models.gnn.common import build_operands
+from repro.train.loop import GNNTrainer, TrainConfig
+
+
+# ----------------------------------------------------------------- Fig. 1
+def fig1_profile(scale=0.003) -> list[str]:
+    """SpMM share of a GCN training step (paper: 70–90% on GPU)."""
+    out = []
+    for ds in ("reddit", "ogbn-proteins"):
+        g = load_dataset(ds, scale=scale)
+        ops, _ = build_operands(g, bm=64, bk=64)
+        d = 128
+        h = jnp.asarray(np.random.default_rng(0)
+                        .standard_normal((ops.a.n_cols, d)), jnp.float32)
+        w = jnp.asarray(np.random.default_rng(1)
+                        .standard_normal((d, d)), jnp.float32)
+        plan = SamplePlan(sel=jnp.arange(ops.a.s_total, dtype=jnp.int32),
+                          row_ids=ops.a.row_ids, col_ids=ops.a.col_ids,
+                          s_pad=ops.a.s_total, n_active=ops.a.s_total)
+        spmm = jax.jit(lambda pl, hh: spmm_apply(
+            ops.a.blocks, pl, hh, ops.a.n_row_blocks, ops.a.bm, ops.a.bk))
+        matmul = jax.jit(lambda hh: hh @ w)
+        t_spmm = timeit(spmm, plan, h)
+        t_mm = timeit(matmul, h)
+        share = t_spmm / (t_spmm + t_mm)
+        out.append(emit(f"fig1/{ds}/spmm_share", t_spmm * 1e6,
+                        f"spmm_share={share:.2f}"))
+    return out
+
+
+# ----------------------------------------------------------------- Table 1
+def table1_fwd_bwd(epochs=60) -> list[str]:
+    """Approximate fwd / bwd / both: bwd-only is safe, fwd collapses."""
+    from repro.graphs.synthetic import sbm_graph
+    from repro.models.gnn import gcn
+    from repro.train.optimizer import Adam, apply_updates
+
+    g = sbm_graph(900, 8, 12, 32, seed=0)
+    ops, meta = build_operands(g, bm=32, bk=32)
+    rng = np.random.default_rng(0)
+    keep_frac = 0.25
+
+    def make_plans(which):
+        """(fwd_plan, bwd_plan) with keep_frac of column blocks."""
+        keep_a = np.zeros(ops.a.n_col_blocks, bool)
+        keep_a[rng.choice(ops.a.n_col_blocks,
+                          max(1, int(keep_frac * ops.a.n_col_blocks)),
+                          replace=False)] = True
+        keep_at = np.zeros(ops.at.n_col_blocks, bool)
+        keep_at[rng.choice(ops.at.n_col_blocks,
+                           max(1, int(keep_frac * ops.at.n_col_blocks)),
+                           replace=False)] = True
+        # note: meta returned by build_operands is for a^T; rebuild a's meta
+        from repro.sparse.bcoo import csr_to_bcoo
+        from repro.sparse.topology import sym_normalize
+        fwd = None
+        if which in ("fwd", "both"):
+            fwd = keep_a
+        bwd = keep_at if which in ("bwd", "both") else None
+        return fwd, bwd
+
+    results = {}
+    for mode in ("exact", "fwd", "bwd", "both"):
+        params = gcn.init(jax.random.PRNGKey(0), 32, 48, 8, 2, True)
+        opt = Adam(lr=0.01)
+        opt_state = opt.init(params)
+        # custom 2-layer GCN with controllable fwd/bwd sampling
+        from repro.core.rsc_spmm import rsc_spmm, exact_spmm
+        keep_fwd, keep_bwd = make_plans(mode)
+        a_meta = None
+        if keep_fwd is not None:
+            from repro.sparse.bcoo import BlockMeta
+            # build meta for a (row/col ids as numpy)
+            a_meta = BlockMeta(
+                row_ids=np.asarray(ops.a.row_ids),
+                col_ids=np.asarray(ops.a.col_ids),
+                col_block_tiles=np.bincount(np.asarray(ops.a.col_ids),
+                                            minlength=ops.a.n_col_blocks),
+                col_block_norm=np.ones(ops.a.n_col_blocks, np.float32),
+                col_nnz=np.ones(ops.a.n_cols, np.int64),
+                col_norm=np.ones(ops.a.n_cols, np.float32))
+            fwd_plan = build_plan(a_meta, keep_fwd, ops.a.n_row_blocks,
+                                  ops.a.s_total)
+        bwd_plan = (build_plan(meta.at_meta, keep_bwd, ops.at.n_row_blocks,
+                               ops.at.s_total)
+                    if keep_bwd is not None else None)
+
+        def model(params, key):
+            h = ops.features
+            for li in range(2):
+                j = h @ params["lin"][li]["w"] + params["lin"][li]["b"]
+                if mode == "both":
+                    # sampled forward; autodiff gives the transpose of the
+                    # SAME sampled operator (paper: reuse fwd pairs in bwd)
+                    hp = spmm_apply(ops.a.blocks, fwd_plan, j,
+                                    ops.a.n_row_blocks, ops.a.bm, ops.a.bk)
+                elif mode == "fwd":
+                    # sampled forward value, exact backward (stop-grad trick)
+                    samp = spmm_apply(ops.a.blocks, fwd_plan,
+                                      jax.lax.stop_gradient(j),
+                                      ops.a.n_row_blocks, ops.a.bm,
+                                      ops.a.bk)
+                    ex = exact_spmm(ops.a, ops.at, j)
+                    hp = ex + jax.lax.stop_gradient(samp - ex)
+                elif mode == "bwd":
+                    hp = rsc_spmm(ops.a, ops.at, bwd_plan, j)
+                else:
+                    hp = exact_spmm(ops.a, ops.at, j)
+                h = jax.nn.relu(hp) if li == 0 else hp
+            return h
+
+        def loss_fn(params, key):
+            logits = model(params, key)
+            valid = jnp.arange(logits.shape[0]) < ops.n_valid
+            m = (ops.train_mask & valid).astype(jnp.float32)
+            lp = jax.nn.log_softmax(logits)
+            nll = -jnp.take_along_axis(
+                lp, ops.labels[:, None].astype(jnp.int32), -1)[:, 0]
+            return jnp.sum(nll * m) / jnp.sum(m)
+
+        @jax.jit
+        def step(params, opt_state, key):
+            lv, gr = jax.value_and_grad(loss_fn)(params, key)
+            up, opt_state = opt.update(gr, opt_state, params)
+            return apply_updates(params, up), opt_state, lv
+
+        key = jax.random.PRNGKey(1)
+        for e in range(epochs):
+            key, sub = jax.random.split(key)
+            params, opt_state, lv = step(params, opt_state, sub)
+        logits = np.asarray(model(params, None))
+        valid = np.arange(logits.shape[0]) < ops.n_valid
+        m = np.asarray(ops.test_mask) & valid
+        acc = float((logits.argmax(-1)[m] ==
+                     np.asarray(ops.labels)[m]).mean())
+        results[mode] = acc
+
+    out = []
+    for mode, acc in results.items():
+        out.append(emit(f"table1/{mode}", 0.0, f"test_acc={acc:.4f}"))
+    assert results["bwd"] > results["fwd"], "paper Table 1 ordering"
+    return out
+
+
+# ----------------------------------------------------------------- Table 2
+def table2_op_speedup(scale=0.01) -> list[str]:
+    """Backward-SpMM op speedup at budgets C (wall-clock + FLOPs ratio)."""
+    out = []
+    for ds in ("reddit", "yelp", "ogbn-proteins", "ogbn-products"):
+        g = load_dataset(ds, scale=scale if ds != "ogbn-products"
+                         else scale / 3)
+        ops, meta = build_operands(g, bm=64, bk=64)
+        at = ops.at
+        d = 128
+        ggrad = jnp.asarray(np.random.default_rng(0)
+                            .standard_normal((at.n_cols, d)), jnp.float32)
+        fp = full_plan(meta.at_meta, at.n_row_blocks, at.s_total)
+        f_exact = jax.jit(lambda pl, x: spmm_apply(
+            at.blocks, pl, x, at.n_row_blocks, at.bm, at.bk))
+        t_exact = timeit(f_exact, fp, ggrad)
+        for c in (0.1, 0.3):
+            scores = meta.at_meta.col_block_norm
+            k = max(1, int(c * at.n_col_blocks))
+            keep = np.zeros(at.n_col_blocks, bool)
+            keep[np.argpartition(-scores, k - 1)[:k]] = True
+            plan = build_plan(meta.at_meta, keep, at.n_row_blocks,
+                              at.s_total)
+            t_s = timeit(f_exact, plan, ggrad)
+            flops_ratio = at.s_total / max(plan.n_active, 1)
+            out.append(emit(
+                f"table2/{ds}/C={c}", t_s * 1e6,
+                f"wall_speedup={t_exact / t_s:.2f}x;"
+                f"flops_speedup={flops_ratio:.2f}x;"
+                f"exact_us={t_exact * 1e6:.0f}"))
+    return out
+
+
+# ----------------------------------------------------------------- Table 3
+def table3_e2e(scale=0.004, epochs=120) -> list[str]:
+    """Accuracy + steady-state step-time speedup.
+
+    At container scale the jit (re)compiles of plan-bucket shapes dominate
+    raw wall time, so like the paper we compare steady-state step times:
+    median over each mode's steps (compiles are one-offs amortized over the
+    paper's 400–1000-epoch runs).
+    """
+    out = []
+    for model, nl in (("gcn", 3), ("graphsage", 3), ("gcnii", 4)):
+        for ds in ("reddit", "ogbn-proteins"):
+            spec = DATASETS[ds]
+            g = load_dataset(ds, scale=scale)
+            common = dict(model=model, n_layers=nl, hidden=64, block=64,
+                          epochs=epochs, dropout=0.3, metric=spec.metric)
+            base = GNNTrainer(TrainConfig(**common), g).train()
+            rsc = GNNTrainer(TrainConfig(rsc=True, budget=0.1, **common),
+                             g).train()
+            t_base = float(np.median(base["history"]["step_time"]))
+            h = rsc["history"]
+            rsc_times = [t for t, m in zip(h["step_time"], h["mode"])
+                         if m == "rsc"]
+            t_rsc = float(np.median(rsc_times))
+            out.append(emit(
+                f"table3/{model}/{ds}", t_rsc * 1e6,
+                f"base_acc={base['best_test']:.4f};"
+                f"rsc_acc={rsc['best_test']:.4f};"
+                f"steady_speedup={t_base / t_rsc:.2f}x;"
+                f"flops_frac={rsc['flops_fraction']:.3f}"))
+    return out
+
+
+# ----------------------------------------------------------------- Table 4
+def table4_ablation(scale=0.006, epochs=80) -> list[str]:
+    out = []
+    g = load_dataset("ogbn-proteins", scale=scale)
+    spec = DATASETS["ogbn-proteins"]
+    for caching in (False, True):
+        for switching in (False, True):
+            cfg = TrainConfig(model="gcn", n_layers=3, hidden=64, block=64,
+                              epochs=epochs, dropout=0.3,
+                              metric=spec.metric, rsc=True, budget=0.3,
+                              caching=caching, switching=switching)
+            t0 = time.perf_counter()
+            res = GNNTrainer(cfg, g).train()
+            dt = time.perf_counter() - t0
+            out.append(emit(
+                f"table4/caching={int(caching)}/switching={int(switching)}",
+                dt / epochs * 1e6,
+                f"auc={res['best_test']:.4f};"
+                f"refreshes={res['cache_stats'].refreshes}"))
+    return out
+
+
+# ----------------------------------------------------------------- Table 11
+def table11_greedy_time() -> list[str]:
+    """Allocator runtime at PAPER-scale block counts (Table 11: ~0.03 s)."""
+    out = []
+    rng = np.random.default_rng(0)
+    for ds, n_nodes in (("reddit", 232_965), ("yelp", 716_847),
+                        ("ogbn-proteins", 132_534),
+                        ("ogbn-products", 2_449_029)):
+        n_cb = n_nodes // 128 + 1
+        for model, L in (("gcn", 3), ("graphsage", 2), ("gcnii", 4)):
+            layers = [LayerSpec(scores=rng.random(n_cb),
+                                tiles=rng.integers(1, 40, n_cb),
+                                d=256, norm=1.0) for _ in range(L)]
+            t0 = time.perf_counter()
+            greedy_allocate(layers, 0.1)
+            dt = time.perf_counter() - t0
+            out.append(emit(f"table11/{model}/{ds}", dt * 1e6,
+                            f"seconds={dt:.4f}"))
+    return out
+
+
+# ----------------------------------------------------------------- Fig. 4
+def fig4_stability(scale=0.004, epochs=60) -> list[str]:
+    g = load_dataset("reddit", scale=scale)
+    cfg = TrainConfig(model="gcn", n_layers=3, hidden=64, block=64,
+                      epochs=epochs, dropout=0.3, rsc=True, budget=0.3)
+    res = GNNTrainer(cfg, g).train()
+    aucs = res["cache_stats"].auc_history
+    return [emit("fig4/topk_auc", 0.0,
+                 f"mean_auc={np.mean(aucs):.4f};min={np.min(aucs):.4f};"
+                 f"n={len(aucs)}")]
+
+
+# ----------------------------------------------------------------- Fig. 6
+def fig6_pareto(scale=0.004, epochs=100) -> list[str]:
+    """RSC greedy vs uniform allocation Pareto points (cache/switch off)."""
+    out = []
+    g = load_dataset("reddit", scale=scale)
+    for strategy in ("greedy", "uniform"):
+        for c in (0.1, 0.3, 0.5):
+            cfg = TrainConfig(model="gcn", n_layers=3, hidden=64, block=64,
+                              epochs=epochs, dropout=0.3, rsc=True,
+                              budget=c, caching=False, switching=False,
+                              strategy=strategy)
+            t0 = time.perf_counter()
+            res = GNNTrainer(cfg, g).train()
+            dt = time.perf_counter() - t0
+            out.append(emit(
+                f"fig6/{strategy}/C={c}", dt / epochs * 1e6,
+                f"acc={res['best_test']:.4f};"
+                f"flops_frac={res['flops_fraction']:.3f}"))
+    return out

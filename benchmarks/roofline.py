@@ -1,0 +1,249 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ROOFLINE DRIVER (§Roofline): derive the three terms per (arch × shape)
+# on the single-pod production mesh.
+#
+# Methodology (documented in EXPERIMENTS.md):
+# * XLA cost analysis counts while-loop bodies ONCE — so all model scans are
+#   unrolled in cost-exact mode (repro.models.lm.flags), and depth is handled
+#   by TWO-POINT EXTRAPOLATION: lower the model at n_repeats=r1 and r2, take
+#   the per-super-block delta, and extend linearly to the full depth (exact
+#   for identical scanned blocks). Microbatching is set to 1 (identical math).
+# * sLSTM's time-step scan cannot be unrolled (seq_len iterations); its
+#   recurrent FLOPs are added analytically (xlstm cells only).
+# * memory_analysis (HBM fit) comes from the production scan-based compile
+#   (the dry-run artifacts), NOT the unrolled cost build.
+#
+# Hardware constants (v5e, per spec): 197 TFLOP/s bf16, 819 GB/s HBM,
+# ~50 GB/s/link ICI.
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import ARCHS, get_arch  # noqa: E402
+from repro.configs.shapes import SHAPES, shape_applicable  # noqa: E402
+from repro.launch.dryrun import ART as DRYRUN_ART, lower_cell  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.lm.flags import cost_exact_mode  # noqa: E402
+from repro.train.lm_steps import abstract_state  # noqa: E402
+from repro.train.optimizer import Adam  # noqa: E402
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+LINK_BW = 50e9           # bytes/s per chip (ICI)
+
+ART = Path(__file__).resolve().parent / "artifacts" / "roofline"
+
+
+def _depth_variant(cfg, r: int):
+    n_layers = len(cfg.prefix) + r * len(cfg.pattern) + len(cfg.suffix)
+    return dataclasses.replace(cfg, n_repeats=r, n_layers=n_layers)
+
+
+def _bwd_factor(kind: str) -> float:
+    """fwd(1) + remat re-fwd(1) + bwd(2) for training; fwd only else."""
+    return 4.0 if kind == "train" else 1.0
+
+
+def _slstm_correction(cfg, shape) -> float:
+    """Analytic recurrent FLOPs for sLSTM layers (time scan ≠ unrollable)."""
+    if "slstm" not in cfg.pattern:
+        return 0.0
+    sp = SHAPES[shape]
+    n_slstm = cfg.layer_plan().count("slstm")
+    d = cfg.d_model
+    dh = d // cfg.slstm_heads
+    tokens = sp.global_batch * (sp.seq_len if sp.kind != "decode" else 1)
+    per_tok = 8 * d * dh + 12 * d   # 4 recurrent einsums + gates
+    return float(n_slstm * tokens * per_tok) * _bwd_factor(sp.kind)
+
+
+def _mlstm_correction(cfg, shape, chunk: int = 128) -> float:
+    """Analytic chunk-scan FLOPs for mLSTM layers (scan left rolled —
+    unrolling blows compile time; see xlstm.py note)."""
+    if "mlstm" not in cfg.pattern:
+        return 0.0
+    sp = SHAPES[shape]
+    n_m = cfg.layer_plan().count("mlstm")
+    t = sp.seq_len if sp.kind != "decode" else 1
+    b = sp.global_batch
+    nh = cfg.mlstm_heads
+    ud = 2 * cfg.d_model
+    dk = dv = ud // nh
+    L = min(chunk, t)
+    n_chunks = max(t // L, 1)
+    per_chunk = 2 * nh * b * L * L * (dk + dv) + 4 * nh * b * L * dk * dv
+    return float(n_m * n_chunks * per_chunk) * _bwd_factor(sp.kind)
+
+
+def _param_counts(cfg) -> tuple[int, int]:
+    """(total, active) parameter counts from the real param tree."""
+    params, _ = abstract_state(cfg, Adam())
+    total = sum(x.size for x in jax.tree.leaves(params))
+    routed = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        keys = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        if "/experts/" in keys or keys.endswith("experts"):
+            routed += leaf.size
+    active = total
+    if cfg.moe is not None and routed:
+        active = total - routed * (1 - cfg.moe.top_k / cfg.moe.n_routed)
+    return int(total), int(active)
+
+
+def roofline_cell(arch: str, shape: str, mesh=None, r_points=(1, 2)) -> dict:
+    cfg = get_arch(arch)
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape, "status": "skipped",
+                "reason": why}
+    mesh = mesh if mesh is not None else make_production_mesh()
+    sp = SHAPES[shape]
+
+    r1, r2 = r_points
+    r_full = cfg.repeats
+    r2 = min(r2, r_full)
+    meas = {}
+    with cost_exact_mode():
+        for r in sorted({r1, r2}):
+            rec = lower_cell(arch, shape, mesh=mesh,
+                             cfg_override=_depth_variant(cfg, r),
+                             microbatch_override=1)
+            assert rec["status"] == "ok", rec
+            meas[r] = rec
+
+    def extrap(field):
+        f1 = meas[r1]["cost_analysis"].get(field, 0.0)
+        f2 = meas[r2]["cost_analysis"].get(field, 0.0)
+        if r1 == r2:
+            return f1
+        per = (f2 - f1) / (r2 - r1)
+        return f1 + per * (r_full - r1)
+
+    def extrap_coll():
+        f1 = meas[r1]["collectives"]["total_bytes"]
+        f2 = meas[r2]["collectives"]["total_bytes"]
+        if r1 == r2:
+            return f1
+        per = (f2 - f1) / (r2 - r1)
+        return f1 + per * (r_full - r1)
+
+    n_dev = mesh.devices.size
+    flops_dev = extrap("flops") + \
+        (_slstm_correction(cfg, shape)
+         + _mlstm_correction(cfg, shape)) / n_dev
+    bytes_dev = extrap("bytes accessed")
+    coll_dev = extrap_coll()
+
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    coll_s = coll_dev / LINK_BW
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", coll_s), key=lambda kv: kv[1])[0]
+
+    n_total, n_active = _param_counts(cfg)
+    tokens = sp.global_batch * (sp.seq_len if sp.kind == "train"
+                                else sp.seq_len if sp.kind == "prefill"
+                                else 1)
+    mf_coef = 6 if sp.kind == "train" else 2
+    model_flops = mf_coef * n_active * tokens
+    hlo_flops_global = flops_dev * n_dev
+    useful = model_flops / hlo_flops_global if hlo_flops_global else 0.0
+
+    # achievable step time = max of terms; roofline fraction = how much of
+    # the dominant resource the USEFUL flops alone would need.
+    step_bound_s = max(compute_s, memory_s, coll_s)
+    useful_compute_s = model_flops / (n_dev * PEAK_FLOPS)
+    frac = useful_compute_s / step_bound_s if step_bound_s else 0.0
+
+    # memory fit from the production (scan) dry-run artifact
+    dr = DRYRUN_ART / f"{arch}__{shape}__sp.json"
+    mem = {}
+    if dr.exists():
+        mem = json.loads(dr.read_text()).get("memory_analysis", {})
+
+    return {
+        "arch": arch, "shape": shape, "status": "ok",
+        "devices": int(n_dev), "kind": sp.kind,
+        "r_points": [r1, r2], "r_full": r_full,
+        "flops_per_dev": flops_dev, "bytes_per_dev": bytes_dev,
+        "coll_bytes_per_dev": coll_dev,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": coll_s, "dominant": dominant,
+        "model_flops": model_flops, "hlo_flops_global": hlo_flops_global,
+        "useful_flops_ratio": useful,
+        "roofline_fraction": frac,
+        "params_total": n_total, "params_active": n_active,
+        "temp_bytes_scan_build": mem.get("temp_size_in_bytes"),
+    }
+
+
+def render_table(recs: list[dict]) -> str:
+    lines = [
+        "| arch | shape | compute (s) | memory (s) | collective (s) | "
+        "dominant | MODEL/HLO flops | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"{r['dominant']} | {r['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.2%} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+
+    archs = sorted(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = sorted(SHAPES) if (args.all or not args.shape) else [args.shape]
+    mesh = make_production_mesh()
+    ART.mkdir(parents=True, exist_ok=True)
+
+    recs = []
+    for arch in archs:
+        for shape in shapes:
+            out = ART / f"{arch}__{shape}.json"
+            if args.skip_done and out.exists():
+                recs.append(json.loads(out.read_text()))
+                print(f"[roofline] {arch} {shape}: cached")
+                continue
+            try:
+                rec = roofline_cell(arch, shape, mesh=mesh)
+            except Exception as e:  # noqa: BLE001
+                import traceback
+                traceback.print_exc()
+                rec = {"arch": arch, "shape": shape, "status": "error",
+                       "error": f"{type(e).__name__}: {e}"}
+            out.write_text(json.dumps(rec, indent=1))
+            recs.append(rec)
+            if rec["status"] == "ok":
+                print(f"[roofline] {arch} {shape}: dominant="
+                      f"{rec['dominant']} comp={rec['compute_s']:.4f}s "
+                      f"mem={rec['memory_s']:.4f}s "
+                      f"coll={rec['collective_s']:.4f}s "
+                      f"frac={rec['roofline_fraction']:.2%}")
+            else:
+                print(f"[roofline] {arch} {shape}: {rec['status']}")
+    table = render_table(recs)
+    (ART / "roofline_table.md").write_text(table + "\n")
+    print(table)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Benchmark orchestrator — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines. The roofline/dry-run drivers
+(512 simulated devices) run as subprocesses so this process keeps 1 device.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig1,table2]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig1,table1,table2,table3,table4,"
+                         "table11,fig4,fig6,roofline")
+    ap.add_argument("--full", action="store_true",
+                    help="larger scales (slower, closer to paper sizes)")
+    args = ap.parse_args()
+    sel = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import paper_tables as T
+
+    jobs = {
+        "fig1": lambda: T.fig1_profile(scale=0.006 if args.full else 0.003),
+        "table1": lambda: T.table1_fwd_bwd(epochs=80 if args.full else 40),
+        "table2": lambda: T.table2_op_speedup(
+            scale=0.02 if args.full else 0.008),
+        "table3": lambda: T.table3_e2e(
+            scale=0.006 if args.full else 0.003,
+            epochs=200 if args.full else 80),
+        "table4": lambda: T.table4_ablation(
+            scale=0.008 if args.full else 0.004,
+            epochs=120 if args.full else 60),
+        "table11": T.table11_greedy_time,
+        "fig4": lambda: T.fig4_stability(
+            scale=0.005 if args.full else 0.003,
+            epochs=80 if args.full else 50),
+        "fig6": lambda: T.fig6_pareto(
+            scale=0.005 if args.full else 0.003,
+            epochs=120 if args.full else 60),
+    }
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in jobs.items():
+        if sel and name not in sel:
+            continue
+        t0 = time.perf_counter()
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            import traceback
+            traceback.print_exc()
+            print(f"{name},0,ERROR:{type(e).__name__}")
+            failures += 1
+        print(f"# {name} finished in {time.perf_counter() - t0:.1f}s",
+              file=sys.stderr)
+
+    if sel is None or "roofline" in (sel or set()):
+        # summarize cached roofline artifacts (full sweep runs separately:
+        # PYTHONPATH=src python -m benchmarks.roofline --all)
+        art = ROOT / "benchmarks" / "artifacts" / "roofline"
+        if art.exists():
+            import json
+            for f in sorted(art.glob("*.json")):
+                r = json.loads(f.read_text())
+                if r.get("status") != "ok":
+                    continue
+                print(f"roofline/{r['arch']}/{r['shape']},0,"
+                      f"dominant={r['dominant']};"
+                      f"frac={r['roofline_fraction']:.4f};"
+                      f"compute_s={r['compute_s']:.4f};"
+                      f"memory_s={r['memory_s']:.4f};"
+                      f"collective_s={r['collective_s']:.4f}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Quickstart: RSC in 40 lines.
+
+Trains a 3-layer GCN on a synthetic cluster graph twice — exact baseline vs
+RSC (budget C=0.1, greedy allocation, caching, switch-back) — and prints the
+accuracy + backward-SpMM FLOPs comparison.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.graphs.synthetic import sbm_graph
+from repro.train.loop import GNNTrainer, TrainConfig
+
+graph = sbm_graph(n_nodes=1500, n_clusters=10, avg_degree=15, feat_dim=64,
+                  seed=0)
+
+baseline = GNNTrainer(
+    TrainConfig(model="gcn", n_layers=3, hidden=64, epochs=120, block=64),
+    graph).train()
+
+rsc = GNNTrainer(
+    TrainConfig(model="gcn", n_layers=3, hidden=64, epochs=120, block=64,
+                rsc=True,          # enable Randomized Sparse Computation
+                budget=0.1,        # Eq. 4b: backward-SpMM FLOPs ≤ 10%
+                refresh_every=10,  # §3.3.1 caching
+                rsc_fraction=0.8,  # §3.3.2 switch back for the last 20%
+                ),
+    graph).train()
+
+print(f"baseline  test acc: {baseline['best_test']:.4f}")
+print(f"RSC       test acc: {rsc['best_test']:.4f}")
+print(f"backward-SpMM FLOPs kept: {rsc['flops_fraction']:.1%}")
+print(f"allocator refreshes: {rsc['cache_stats'].refreshes} "
+      f"({rsc['cache_stats'].host_seconds * 1e3:.1f} ms host time total)")
+assert rsc["best_test"] > baseline["best_test"] - 0.05

@@ -1,0 +1,83 @@
+"""Train a ~100M-class LM (xlstm-125m at reduced width for CPU) for a few
+hundred steps with checkpoint/restart, optionally with the beyond-paper
+dense-RSC backward sampling on its projections.
+
+    PYTHONPATH=src python examples/train_lm_rsc.py --steps 200 [--rsc]
+"""
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs import get_arch
+from repro.data.tokens import TokenStream
+from repro.models.lm.backbone import init_params
+from repro.train.lm_steps import make_train_step
+from repro.train.optimizer import Adam
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--rsc", action="store_true")
+    ap.add_argument("--width", type=int, default=192,
+                    help="d_model override for CPU feasibility")
+    ap.add_argument("--ckpt", default="/tmp/rsc_lm_ckpt")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch("xlstm-125m")
+    cfg = dataclasses.replace(
+        cfg, d_model=args.width, head_dim=None, vocab=2048,
+        name=f"xlstm-{args.width}")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"{cfg.name}: {n_params/1e6:.1f}M params")
+
+    opt = Adam(lr=3e-4, clip_norm=1.0)
+    opt_state = opt.init(params)
+    rsc = {"keep_frac": 0.5, "bk": 64} if args.rsc else None
+    step = jax.jit(make_train_step(cfg, opt, rsc=rsc))
+    ckpt = Checkpointer(args.ckpt, keep=2)
+
+    start = 0
+    if ckpt.latest_step() is not None:
+        start, (params, opt_state) = ckpt.restore((params, opt_state))
+        print(f"resumed from step {start}")
+
+    # skewed synthetic corpus (shard-aware, resumable) — learnable unigram
+    # structure, so the loss demonstrably descends below ln(vocab).
+    stream = TokenStream(vocab=cfg.vocab, seq_len=args.seq,
+                         global_batch=args.batch, seed=args.seed, skew=2.0)
+
+    t0 = time.perf_counter()
+    losses = []
+    for i in range(start, args.steps):
+        b = stream.batch(i)
+        batch = {"tokens": jnp.asarray(b["tokens"]),
+                 "targets": jnp.asarray(b["targets"])}
+        params, opt_state, loss = step(params, opt_state, batch)
+        losses.append(float(loss))
+        if i % 20 == 0:
+            print(f"step {i:4d} loss {losses[-1]:.4f}")
+        if (i + 1) % 50 == 0:
+            ckpt.save(i + 1, (params, opt_state))
+    ckpt.save(args.steps, (params, opt_state), blocking=True)
+    assert np.isfinite(losses).all()
+    head = float(np.mean(losses[:5]))
+    tail = float(np.mean(losses[-5:]))
+    print(json.dumps({"first_losses_mean": head, "final_losses_mean": tail,
+                      "steps": len(losses), "rsc": bool(rsc),
+                      "wall_s": round(time.perf_counter() - t0, 1)}))
+    assert tail < head, "loss should decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Config registry: 10 assigned LM architectures + GNN paper configs."""
+from repro.configs.lm_archs import ARCHS, get_arch, smoke_config
+from repro.configs.shapes import SHAPES, input_specs, make_batch, \
+    shape_applicable
+
+__all__ = ["ARCHS", "get_arch", "smoke_config", "SHAPES", "input_specs",
+           "make_batch", "shape_applicable"]

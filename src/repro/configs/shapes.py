@@ -1,0 +1,127 @@
+"""Assigned input shapes × helpers to build specs/batches per (arch, shape).
+
+  train_4k     seq 4,096   global_batch 256   (training      → train_step)
+  prefill_32k  seq 32,768  global_batch 32    (inference     → prefill_step)
+  decode_32k   seq 32,768  global_batch 128   (decode        → decode_step,
+                                               1 token, 32k KV cache)
+  long_500k    seq 524,288 global_batch 1     (long-context decode; only for
+                                               sub-quadratic archs)
+
+``input_specs`` returns ShapeDtypeStructs (no allocation — the dry-run
+contract); ``make_batch`` materializes small real batches for smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm.config import LMConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+# Per-(arch, shape) microbatch counts tuned so train_4k activations fit
+# 16 GB/chip under scan+remat (DESIGN.md §7 napkin math; verified by the
+# dry-run's memory_analysis).
+MICROBATCHES: dict[tuple[str, str], int] = {
+    ("qwen3-32b", "train_4k"): 16,
+    ("deepseek-v2-236b", "train_4k"): 16,
+    ("internlm2-20b", "train_4k"): 8,
+    ("llama-3.2-vision-11b", "train_4k"): 4,
+    ("recurrentgemma-9b", "train_4k"): 4,
+    ("qwen3-1.7b", "train_4k"): 2,
+    ("qwen2-0.5b", "train_4k"): 2,
+    ("deepseek-v2-lite-16b", "train_4k"): 4,
+    ("musicgen-medium", "train_4k"): 2,
+    ("xlstm-125m", "train_4k"): 2,
+}
+
+
+def microbatches(arch: str, shape: str) -> int:
+    return MICROBATCHES.get((arch, shape), 1)
+
+
+def shape_applicable(cfg: LMConfig, shape: str) -> tuple[bool, str]:
+    """long_500k only for sub-quadratic archs (DESIGN.md §4 skip rule)."""
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full-attention arch: 524k-token decode has no "
+                       "sub-quadratic mechanism — skipped per assignment")
+    return True, ""
+
+
+def input_specs(cfg: LMConfig, shape: str,
+                batch_override: int | None = None) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    sp = SHAPES[shape]
+    b = batch_override if batch_override is not None else sp.global_batch
+    t = sp.seq_len
+    i32 = jnp.int32
+    bf = jnp.dtype(cfg.dtype)
+    S = jax.ShapeDtypeStruct
+
+    if sp.kind == "train":
+        specs = {"targets": S((b, t), i32)}
+        if cfg.embeds_input:
+            specs["embeds"] = S((b, t, cfg.d_model), bf)
+        else:
+            specs["tokens"] = S((b, t), i32)
+        if cfg.cross_seq:
+            specs["cross_states"] = S((b, cfg.cross_seq, cfg.d_model), bf)
+        return specs
+    if sp.kind == "prefill":
+        specs = {}
+        if cfg.embeds_input:
+            specs["embeds"] = S((b, t, cfg.d_model), bf)
+        else:
+            specs["tokens"] = S((b, t), i32)
+        if cfg.cross_seq:
+            specs["cross_states"] = S((b, cfg.cross_seq, cfg.d_model), bf)
+        return specs
+    # decode: one new token against a cache of length seq_len
+    specs = {"tokens": S((b, 1), i32)}
+    if cfg.embeds_input:
+        # musicgen decodes its own EnCodec token ids through its embed table
+        specs = {"tokens": S((b, 1), i32)}
+    return specs
+
+
+def make_batch(cfg: LMConfig, shape: str, batch: int, seq: int,
+               seed: int = 0) -> dict:
+    """Small concrete batch for smoke tests (reduced b/t)."""
+    rng = np.random.default_rng(seed)
+    sp = SHAPES[shape]
+    bf = jnp.dtype(cfg.dtype)
+    out: dict = {}
+    if sp.kind in ("train", "prefill"):
+        if cfg.embeds_input:
+            out["embeds"] = jnp.asarray(
+                rng.standard_normal((batch, seq, cfg.d_model)), bf)
+        else:
+            out["tokens"] = jnp.asarray(
+                rng.integers(0, cfg.vocab, (batch, seq)), jnp.int32)
+        if cfg.cross_seq:
+            out["cross_states"] = jnp.asarray(
+                rng.standard_normal((batch, cfg.cross_seq, cfg.d_model)), bf)
+        if sp.kind == "train":
+            out["targets"] = jnp.asarray(
+                rng.integers(0, cfg.vocab, (batch, seq)), jnp.int32)
+    else:
+        out["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab, (batch, 1)), jnp.int32)
+    return out

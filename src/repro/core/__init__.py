@@ -1,0 +1,21 @@
+"""RSC core: the paper's contribution as composable JAX modules."""
+from repro.core.plan import SamplePlan, build_plan, full_plan
+from repro.core.sampling import (block_scores, pair_scores, row_norms,
+                                 sampling_probs, topk_overlap_auc, topk_pairs)
+from repro.core.allocator import (Allocation, LayerSpec, dp_allocate,
+                                  greedy_allocate, uniform_allocate)
+from repro.core.cache import PlanCache
+from repro.core.schedule import RSCSchedule
+from repro.core.rsc_spmm import exact_spmm, rsc_spmm, spmm_apply, transpose_bcoo
+from repro.core.rsc_matmul import rsc_matmul
+
+__all__ = [
+    "SamplePlan", "build_plan", "full_plan",
+    "block_scores", "pair_scores", "row_norms", "sampling_probs",
+    "topk_overlap_auc", "topk_pairs",
+    "Allocation", "LayerSpec", "dp_allocate", "greedy_allocate",
+    "uniform_allocate",
+    "PlanCache", "RSCSchedule",
+    "exact_spmm", "rsc_spmm", "spmm_apply", "transpose_bcoo",
+    "rsc_matmul",
+]

@@ -1,0 +1,103 @@
+"""SamplePlan: the metadata-only representation of a sampled sparse operand.
+
+A plan selects a subset of a BlockCOO's tiles (by index into ``blocks``),
+sorted by row block, padded to a bucketed static length with entries pointing
+at the sentinel zero tile. Every row block appears at least once (sentinel
+entries for otherwise-empty rows) so the Pallas kernel's
+initialize-on-row-change accumulation covers the whole output.
+
+Slicing the sparse matrix (paper Fig. 5 — the expensive CSR rebuild) is here
+an O(S) int32 rewrite; tile data never moves.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import numpy as np
+
+from repro.sparse.bcoo import BlockMeta
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["sel", "row_ids", "col_ids"],
+    meta_fields=["s_pad", "n_active"],
+)
+@dataclasses.dataclass(frozen=True)
+class SamplePlan:
+    """Index-list view of a (possibly sampled) BlockCOO operand."""
+
+    sel: jax.Array      # (s_pad,) int32 — tile index into blocks; sentinel = s_total
+    row_ids: jax.Array  # (s_pad,) int32 — sorted ascending
+    col_ids: jax.Array  # (s_pad,) int32
+    s_pad: int          # static grid length
+    n_active: int       # real (non-sentinel) tiles — bookkeeping/FLOPs
+
+    def flops(self, bm: int, bk: int, d: int) -> int:
+        """FLOPs of SpMM under this plan (Eq. 4b cost, block units)."""
+        return 2 * self.n_active * bm * bk * d
+
+
+def build_plan(
+    meta: BlockMeta,
+    keep_col_blocks: np.ndarray | None,
+    n_row_blocks: int,
+    sentinel: int,
+    bucket: int = 1,
+) -> SamplePlan:
+    """Build a plan keeping tiles whose column block is in ``keep_col_blocks``.
+
+    keep_col_blocks: bool (n_col_blocks,) or None for the full/exact plan.
+    sentinel: index of the zero tile (== s_total).
+    bucket: pad s_pad up to a multiple of this (bounds recompilation count).
+    """
+    s_total = meta.row_ids.shape[0]
+    if keep_col_blocks is None:
+        keep_tile = np.ones(s_total, dtype=bool)
+    else:
+        keep_tile = keep_col_blocks[meta.col_ids]
+
+    sel = np.nonzero(keep_tile)[0].astype(np.int32)
+    rows = meta.row_ids[sel]
+    cols = meta.col_ids[sel]
+
+    # Guarantee every row block appears: add one sentinel entry per missing
+    # row so the kernel zero-initializes that output tile.
+    present = np.zeros(n_row_blocks, dtype=bool)
+    present[rows] = True
+    missing = np.nonzero(~present)[0].astype(np.int32)
+    if missing.size:
+        sel = np.concatenate([sel, np.full(missing.shape, sentinel, np.int32)])
+        rows = np.concatenate([rows, missing])
+        cols = np.concatenate([cols, np.zeros(missing.shape, np.int32)])
+
+    order = np.argsort(rows, kind="stable")
+    sel, rows, cols = sel[order], rows[order], cols[order]
+
+    n_active = int(sel.shape[0])
+    s_pad = _ceil_to(max(n_active, 1), max(bucket, 1))
+    pad = s_pad - n_active
+    if pad:
+        last_row = rows[-1] if n_active else 0
+        sel = np.concatenate([sel, np.full(pad, sentinel, np.int32)])
+        rows = np.concatenate([rows, np.full(pad, last_row, np.int32)])
+        cols = np.concatenate([cols, np.zeros(pad, np.int32)])
+
+    return SamplePlan(
+        sel=jax.numpy.asarray(sel),
+        row_ids=jax.numpy.asarray(rows),
+        col_ids=jax.numpy.asarray(cols),
+        s_pad=s_pad,
+        n_active=int(np.count_nonzero(keep_tile)),
+    )
+
+
+def full_plan(meta: BlockMeta, n_row_blocks: int, sentinel: int) -> SamplePlan:
+    """The exact (un-sampled) plan."""
+    return build_plan(meta, None, n_row_blocks, sentinel, bucket=1)

@@ -1,0 +1,80 @@
+"""rsc_matmul: dense Adelman-style sampled backward for transformer layers.
+
+Beyond-paper (DESIGN.md §4): the assigned LM architectures have no SpMM, so
+the paper's sparse technique is inapplicable as-is. We apply its dense
+ancestor (Adelman et al. 2021 top-k column-row sampling, which the paper
+builds on) to the *weight-gradient* contraction of linear layers:
+
+    y = x @ w          x: (n, m)  w: (m, q)      n = tokens (contraction of dW)
+    dW = xᵀ @ g        — approximated: keep the top-k token BLOCKS by
+                         ‖x_blk‖·‖g_blk‖ (128-token granularity, MXU-aligned)
+    dx = g @ wᵀ        — exact (signal propagation; mirrors the paper's
+                         backward-only, forward-exact rule)
+
+Selection happens inside the backward pass (scores depend on g), with a
+static keep count so shapes stay jit-stable. The gather feeds the
+``gather_matmul`` Pallas kernel (or a jnp take-based fallback).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def _block_norms(x: jax.Array, bk: int) -> jax.Array:
+    """L2 mass per 128-row block: (n//bk,)."""
+    n = x.shape[0]
+    x32 = x.astype(jnp.float32).reshape(n // bk, bk, -1)
+    return jnp.sqrt(jnp.sum(x32 * x32, axis=(1, 2)))
+
+
+def sampled_xt_g(x: jax.Array, g: jax.Array, keep_blocks: int, bk: int,
+                 backend: str = "jnp") -> jax.Array:
+    """approx(xᵀ g) keeping the top-`keep_blocks` token blocks."""
+    scores = _block_norms(x, bk) * _block_norms(g, bk)
+    _, idx = jax.lax.top_k(scores, keep_blocks)
+    idx = jnp.sort(idx).astype(jnp.int32)
+    if backend in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops as kops
+        return kops.gather_matmul(
+            x, g, idx, bk=bk, transpose_lhs=True,
+            interpret=(backend == "pallas_interpret"))
+    n, m = x.shape
+    xb = x.reshape(n // bk, bk, m)
+    gb = g.reshape(n // bk, bk, -1)
+    xs = xb[idx]  # (k, bk, m)
+    gs = gb[idx]  # (k, bk, q)
+    return jnp.einsum("kbm,kbq->mq", xs, gs,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def rsc_matmul(x: jax.Array, w: jax.Array, keep_frac: float = 0.3,
+               bk: int = 128, backend: str = "jnp") -> jax.Array:
+    """x @ w with top-k-sampled dW and exact dx."""
+    return jnp.matmul(x, w)
+
+
+def _fwd(x, w, keep_frac, bk, backend):
+    return jnp.matmul(x, w), (x, w)
+
+
+def _bwd(keep_frac, bk, backend, res, g):
+    x, w = res
+    orig_shape = x.shape
+    x2 = x.reshape(-1, x.shape[-1])
+    g2 = g.reshape(-1, g.shape[-1])
+    n = x2.shape[0]
+    n_blocks = max(n // bk, 1)
+    keep = max(1, min(n_blocks, int(round(keep_frac * n_blocks))))
+    if n % bk != 0:   # ragged tail: fall back to exact dW
+        dw = jnp.einsum("nm,nq->mq", x2, g2)
+    else:
+        dw = sampled_xt_g(x2, g2, keep, bk, backend)
+    dx = jnp.matmul(g2, w.T).reshape(orig_shape)
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+rsc_matmul.defvjp(_fwd, _bwd)

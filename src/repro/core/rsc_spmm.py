@@ -1,0 +1,140 @@
+"""rsc_spmm: exact forward SpMM, top-k-sampled backward SpMM (paper §3.1).
+
+Forward:  H_pre = SpMM(Ã, J)                       — exact (Prop. 3.1 requires it)
+Backward: ∇J    = SpMM_sampled(Ãᵀ, ∇H_pre; plan)   — only the plan's tiles
+
+Both directions run the same block-COO apply (`spmm_apply`), either the
+pure-JAX path (segment_sum — CPU training / oracle) or the Pallas kernel
+(`repro.kernels.ops.bcoo_spmm`) selected by ``backend``.
+
+Bias note (paper §3.1.2): the approximation sits strictly behind the ReLU
+mask computed from exact pre-activations, so gradients stay unbiased when
+the sampler is; deterministic top-k is unbiased under the zero-centered
+assumption of Adelman et al.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.plan import SamplePlan
+from repro.sparse.bcoo import BlockCOO
+
+
+def _zero_cot(tree):
+    """Cotangents for non-differentiable operands (float0 for ints)."""
+    def z(x):
+        if jnp.issubdtype(jnp.asarray(x).dtype, jnp.integer):
+            return np.zeros(jnp.shape(x), dtype=jax.dtypes.float0)
+        return jnp.zeros_like(x)
+    return jax.tree.map(z, tree)
+
+
+def spmm_apply(
+    blocks: jax.Array,      # (S+1, bm, bk) tiles incl. sentinel
+    plan: SamplePlan,
+    h: jax.Array,           # (n_cols, d)
+    n_row_blocks: int,
+    bm: int,
+    bk: int,
+    backend: str = "jnp",
+) -> jax.Array:
+    """out[r] = Σ_{tiles (r,c) in plan} blocks[sel] @ h[c·bk:(c+1)·bk]."""
+    if backend == "pallas" or backend == "pallas_interpret":
+        from repro.kernels import ops as kops
+        return kops.bcoo_spmm(
+            blocks, plan.sel, plan.row_ids, plan.col_ids, h,
+            n_row_blocks=n_row_blocks, bm=bm, bk=bk,
+            interpret=(backend == "pallas_interpret"),
+        )
+    d = h.shape[-1]
+    hb = h.reshape(-1, bk, d)
+    gathered = hb[plan.col_ids]          # (s_pad, bk, d)
+    tiles = blocks[plan.sel]             # (s_pad, bm, bk)
+    part = jnp.einsum("sij,sjd->sid", tiles, gathered,
+                      preferred_element_type=jnp.float32)
+    out = jax.ops.segment_sum(part, plan.row_ids,
+                              num_segments=n_row_blocks)
+    return out.reshape(n_row_blocks * bm, d).astype(h.dtype)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4,))
+def rsc_spmm(a: BlockCOO, at: BlockCOO, bwd_plan: SamplePlan,
+             h: jax.Array, backend: str = "jnp") -> jax.Array:
+    """SpMM(a, h) with sampled VJP through ``at`` under ``bwd_plan``.
+
+    ``a`` carries its own full plan implicitly (its sorted id lists are the
+    exact plan); ``at`` is the pre-transposed operand for the backward op.
+    """
+    return _exact_fwd(a, h, backend)
+
+
+def _exact_fwd(a: BlockCOO, h: jax.Array, backend: str) -> jax.Array:
+    plan = SamplePlan(sel=jnp.arange(a.s_total, dtype=jnp.int32),
+                      row_ids=a.row_ids, col_ids=a.col_ids,
+                      s_pad=a.s_total, n_active=a.s_total)
+    return spmm_apply(a.blocks, plan, h, a.n_row_blocks, a.bm, a.bk, backend)
+
+
+def _fwd(a, at, bwd_plan, h, backend):
+    out = _exact_fwd(a, h, backend)
+    return out, (a, at, bwd_plan)
+
+
+def _bwd(backend, res, g):
+    a, at, bwd_plan = res
+    # ∇J = SpMM_sampled(Ãᵀ, ∇H_pre): only the tiles the plan kept.
+    dh = spmm_apply(at.blocks, bwd_plan, g, at.n_row_blocks, at.bm, at.bk,
+                    backend)
+    return (_zero_cot(a), _zero_cot(at), _zero_cot(bwd_plan), dh)
+
+
+rsc_spmm.defvjp(_fwd, _bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def exact_spmm(a: BlockCOO, at: BlockCOO, h: jax.Array,
+               backend: str = "jnp") -> jax.Array:
+    """Exact SpMM with exact VJP — the no-RSC baseline.
+
+    Implemented as a custom_vjp as well so forward/backward both route
+    through the same block-COO apply (fair Table 2/3 comparisons).
+    ``at`` must be the pre-transposed operand (built at setup time —
+    transposition cannot happen under jit).
+    """
+    return _exact_fwd(a, h, backend)
+
+
+def _eb_fwd(a, at, h, backend):
+    return _exact_fwd(a, h, backend), (a, at)
+
+
+def _eb_bwd(backend, res, g):
+    a, at = res
+    dh = _exact_fwd(at, g, backend)
+    return (_zero_cot(a), _zero_cot(at), dh)
+
+
+exact_spmm.defvjp(_eb_fwd, _eb_bwd)
+
+
+def transpose_bcoo(a: BlockCOO) -> BlockCOO:
+    """Ãᵀ in BlockCOO form: transpose tiles, swap (row, col), re-sort."""
+    rows = np.asarray(a.row_ids)
+    cols = np.asarray(a.col_ids)
+    order = np.lexsort((rows, cols))
+    blocks = jnp.concatenate(
+        [jnp.swapaxes(a.blocks[: a.s_total][order], 1, 2),
+         jnp.zeros((1, a.bk, a.bm), a.blocks.dtype)], axis=0)
+    return BlockCOO(
+        blocks=blocks,
+        row_ids=jnp.asarray(cols[order]),
+        col_ids=jnp.asarray(rows[order]),
+        bm=a.bk, bk=a.bm,
+        n_rows=a.n_cols, n_cols=a.n_rows,
+        n_row_blocks=a.n_col_blocks, n_col_blocks=a.n_row_blocks,
+        s_total=a.s_total,
+    )

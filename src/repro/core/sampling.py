@@ -1,0 +1,93 @@
+"""Column-row pair scoring and top-k selection (paper §2.2, Eq. 2–3).
+
+Two granularities:
+
+* per-column (the paper's original): used by the reference path and tests;
+* per-column-BLOCK (128-wide, DESIGN.md §2): the TPU-native granularity the
+  allocator and kernels operate on. With degree-sorted node labeling the
+  block aggregate Σ_i ‖A_{:,i}‖‖∇H_{i,:}‖ tracks the per-column scores.
+
+Device side computes only the cheap dynamic half (row norms of ∇H); the
+static half (column norms of Ã) is precomputed on host at graph build time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ----------------------------- device helpers -----------------------------
+
+def row_norms(x: jax.Array) -> jax.Array:
+    """‖X_{i,:}‖₂ per row, f32 accumulation."""
+    x32 = x.astype(jnp.float32)
+    return jnp.sqrt(jnp.sum(x32 * x32, axis=-1))
+
+
+def pair_scores(col_norm: jax.Array, grad_row_norm: jax.Array) -> jax.Array:
+    """Eq. 3 numerator: ‖Ã^T_{:,i}‖₂ · ‖∇H_{i,:}‖₂ per pair i."""
+    return col_norm * grad_row_norm
+
+
+def sampling_probs(col_norm: jax.Array, grad_row_norm: jax.Array) -> jax.Array:
+    """Eq. 3: normalized sampling distribution over column-row pairs."""
+    s = pair_scores(col_norm, grad_row_norm)
+    return s / jnp.maximum(jnp.sum(s), 1e-30)
+
+
+# ----------------------------- host selection ------------------------------
+
+def topk_pairs(scores: np.ndarray, k: int) -> np.ndarray:
+    """Deterministic top-k (Adelman-style §2.2.1): boolean keep mask."""
+    k = int(np.clip(k, 0, scores.shape[0]))
+    mask = np.zeros(scores.shape[0], dtype=bool)
+    if k:
+        idx = np.argpartition(-scores, k - 1)[:k]
+        mask[idx] = True
+    return mask
+
+
+def block_scores(
+    col_norm: np.ndarray,
+    grad_row_norm: np.ndarray,
+    bk: int,
+    n_col_blocks: int,
+) -> np.ndarray:
+    """Aggregate pair scores per 128-wide column block."""
+    s = (col_norm.astype(np.float64) * grad_row_norm.astype(np.float64))
+    out = np.zeros(n_col_blocks, dtype=np.float64)
+    cb = np.arange(s.shape[0]) // bk
+    np.add.at(out, cb, s)
+    return out
+
+
+def topk_sample_indices(
+    probs: np.ndarray, k: int, rng: np.random.Generator
+) -> tuple[np.ndarray, np.ndarray]:
+    """Drineas et al. randomized sampling (Eq. 2): indices + 1/(k·p) scales.
+
+    Kept as the stochastic baseline the paper compares against; RSC itself
+    uses deterministic top-k without scaling.
+    """
+    idx = rng.choice(probs.shape[0], size=k, replace=True, p=probs)
+    scale = 1.0 / (k * probs[idx])
+    return idx.astype(np.int64), scale.astype(np.float32)
+
+
+def topk_overlap_auc(prev_scores: np.ndarray, new_keep: np.ndarray) -> float:
+    """Fig. 4 metric: AUC of old scores ranking the new keep set.
+
+    1.0 means the ranking is unchanged between refreshes — the stability that
+    justifies the caching mechanism.
+    """
+    pos = prev_scores[new_keep]
+    neg = prev_scores[~new_keep]
+    if pos.size == 0 or neg.size == 0:
+        return 1.0
+    # Mann-Whitney U via rank sums.
+    allv = np.concatenate([pos, neg])
+    ranks = allv.argsort().argsort().astype(np.float64) + 1
+    r_pos = ranks[: pos.size].sum()
+    u = r_pos - pos.size * (pos.size + 1) / 2
+    return float(u / (pos.size * neg.size))

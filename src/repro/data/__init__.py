@@ -1,0 +1,3 @@
+from repro.data.tokens import TokenStream
+
+__all__ = ["TokenStream"]

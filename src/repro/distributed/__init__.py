@@ -1,0 +1,7 @@
+from repro.distributed.compression import (compress_int8, decompress_int8,
+                                           ErrorFeedbackCompressor)
+from repro.distributed.fault import StragglerMonitor, HeartbeatTracker
+from repro.distributed.elastic import reshard_tree
+
+__all__ = ["compress_int8", "decompress_int8", "ErrorFeedbackCompressor",
+           "StragglerMonitor", "HeartbeatTracker", "reshard_tree"]

@@ -1,0 +1,67 @@
+"""Gradient compression for the DP all-reduce, with error feedback.
+
+int8 block-quantization (per-128-block scale, symmetric) cuts DP all-reduce
+bytes 4× vs f32 / 2× vs bf16; the error-feedback accumulator keeps the
+compressed SGD unbiased-in-the-limit (Karimireddy et al. 2019). Composes
+with RSC: both inject zero-mean gradient noise, which the paper's switching
+mechanism (§3.3.2) also mitigates — the trainer applies switch-back to the
+compressor as well when enabled.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(g: jax.Array, block: int = 128):
+    """g (flat) -> (int8 codes, f32 scales per block)."""
+    n = g.size
+    pad = (-n) % block
+    gf = jnp.pad(g.reshape(-1).astype(jnp.float32), (0, pad))
+    gb = gf.reshape(-1, block)
+    scale = jnp.max(jnp.abs(gb), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    codes = jnp.clip(jnp.round(gb / scale), -127, 127).astype(jnp.int8)
+    return codes, scale[:, 0]
+
+
+def decompress_int8(codes: jax.Array, scales: jax.Array, shape,
+                    dtype=jnp.float32) -> jax.Array:
+    gb = codes.astype(jnp.float32) * scales[:, None]
+    n = 1
+    for d in shape:
+        n *= d
+    return gb.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+class ErrorFeedbackCompressor:
+    """Stateful EF21-style wrapper: compress(g + e), carry e forward."""
+
+    def __init__(self, block: int = 128):
+        self.block = block
+
+    def init(self, grads):
+        return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def compress(self, grads, err):
+        """Returns (quantized-and-restored grads, new error state).
+
+        The restored grads are what the (simulated) all-reduce sums; the
+        quantization residual goes into the error accumulator.
+        """
+        def one(g, e):
+            x = g.astype(jnp.float32) + e
+            codes, scales = compress_int8(x, self.block)
+            deq = decompress_int8(codes, scales, g.shape)
+            return deq.astype(g.dtype), x - deq
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_e = treedef.flatten_up_to(err)
+        outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+        return (jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs]),
+                jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs]))
+
+    @staticmethod
+    def bytes_ratio(dtype=jnp.bfloat16, block: int = 128) -> float:
+        """Wire-bytes ratio vs uncompressed (int8 + f32 scale per block)."""
+        return (1.0 + 4.0 / block) / jnp.dtype(dtype).itemsize

@@ -1,0 +1,24 @@
+"""Elastic resharding: move a checkpointed pytree onto a different mesh.
+
+Checkpoints store full logical arrays (host npz), so elasticity is
+re-placement: given the new mesh and the sharding-rule function, lay every
+leaf out under the new topology. Works for grow and shrink; used together
+with RestartPolicy("shrink") after node loss.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def reshard_tree(tree, shardings):
+    """Place every leaf according to ``shardings`` (same treedef)."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s) if s is not None else x,
+        tree, shardings,
+        is_leaf=lambda x: not isinstance(x, (dict, list, tuple)))
+
+
+def replicate_tree(tree, mesh: Mesh):
+    rep = NamedSharding(mesh, P())
+    return jax.tree.map(lambda x: jax.device_put(x, rep), tree)

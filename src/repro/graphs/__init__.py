@@ -1,0 +1,7 @@
+"""Graph data pipeline: synthetic generators, dataset registry, samplers."""
+from repro.graphs.synthetic import sbm_graph, GraphData
+from repro.graphs.datasets import DATASETS, load_dataset
+from repro.graphs.saint import random_walk_subgraph
+
+__all__ = ["sbm_graph", "GraphData", "DATASETS", "load_dataset",
+           "random_walk_subgraph"]

@@ -1,0 +1,57 @@
+"""GraphSAINT random-walk sampler (Zeng et al. 2020) — mini-batch setting.
+
+Per the paper's footnote 1 (§3.3.1), sub-graphs are sampled OFFLINE up
+front; during training the RSC caching mechanism is applied per sampled
+subgraph. ``random_walk_subgraph`` implements the RW sampler (roots × walk
+length) used by the paper's GraphSAINT rows in Table 3.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graphs.synthetic import GraphData
+from repro.sparse.csr import CSR
+
+
+def random_walk_subgraph(
+    g: GraphData,
+    roots: int,
+    walk_length: int,
+    rng: np.random.Generator,
+) -> GraphData:
+    """Sample node-induced subgraph from `roots` random walks."""
+    adj = g.adj
+    start = rng.choice(g.n, size=roots, replace=True)
+    visited = set(start.tolist())
+    frontier = start
+    for _ in range(walk_length):
+        nxt = np.empty_like(frontier)
+        for i, u in enumerate(frontier):
+            lo, hi = adj.rowptr[u], adj.rowptr[u + 1]
+            nxt[i] = adj.col[rng.integers(lo, hi)] if hi > lo else u
+        visited.update(nxt.tolist())
+        frontier = nxt
+    nodes = np.fromiter(visited, dtype=np.int64)
+    nodes.sort()
+    return induced_subgraph(g, nodes)
+
+
+def induced_subgraph(g: GraphData, nodes: np.ndarray) -> GraphData:
+    remap = -np.ones(g.n, dtype=np.int64)
+    remap[nodes] = np.arange(nodes.shape[0])
+    rows_all = np.repeat(np.arange(g.n, dtype=np.int64), g.adj.row_nnz())
+    cols_all = g.adj.col.astype(np.int64)
+    m = (remap[rows_all] >= 0) & (remap[cols_all] >= 0)
+    sub = CSR.from_coo(remap[rows_all[m]], remap[cols_all[m]],
+                       g.adj.val[m], (nodes.shape[0], nodes.shape[0]))
+    return GraphData(
+        adj=sub,
+        features=g.features[nodes],
+        labels=g.labels[nodes],
+        train_mask=g.train_mask[nodes],
+        val_mask=g.val_mask[nodes],
+        test_mask=g.test_mask[nodes],
+        num_classes=g.num_classes,
+        multilabel=g.multilabel,
+        name=f"{g.name}-saint",
+    )

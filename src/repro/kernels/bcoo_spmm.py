@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: block-COO SpMM with scalar-prefetched tile ids.
+
+    out[r·bm:(r+1)·bm, j·bd:(j+1)·bd] = Σ_{s: row_ids[s]==r}
+        blocks[sel[s]] @ h[col_ids[s]·bk:(col_ids[s]+1)·bk, j·bd:(j+1)·bd]
+
+Grid: (d_tiles, s_pad) — the tile index s is the FASTEST axis so consecutive
+tiles of the same output row keep the accumulator resident in VMEM; the
+output tile flushes exactly once per (row, j).
+
+Scalar prefetch (PrefetchScalarGridSpec): ``sel``/``row_ids``/``col_ids``
+drive the BlockSpec index maps, which is what makes SAMPLING METADATA-ONLY —
+a sampled operand is the same `blocks` array walked by a shorter id list,
+and the grid length s_pad is the FLOPs knob (paper §3.2 mapped to TPU).
+
+Sentinel convention: padding entries have sel == s_total (an all-zero tile)
+and repeat the previous row id, so they accumulate nothing and never
+re-initialize an output tile. Row blocks with no tiles MUST still appear
+once (plan invariant) so their output is zero-initialized.
+
+VMEM working set per grid step: bm·bk (tile) + bk·bd (h slab) + bm·bd (acc),
+all ≤128·512 f32 by default — comfortably inside the ~16 MB VMEM budget, and
+bm=bk=128 aligns the MXU contraction dims.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_row_blocks", "bm", "bk", "bd", "interpret"),
+)
+def bcoo_spmm(
+    blocks: jax.Array,    # (S_total+1, bm, bk) — +1 zero sentinel
+    sel: jax.Array,       # (s_pad,) int32
+    row_ids: jax.Array,   # (s_pad,) int32, sorted ascending
+    col_ids: jax.Array,   # (s_pad,) int32
+    h: jax.Array,         # (n_cols, d)
+    *,
+    n_row_blocks: int,
+    bm: int,
+    bk: int,
+    bd: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    n_cols, d = h.shape
+    assert n_cols % bk == 0, (n_cols, bk)
+    bd = min(bd, d)
+    assert d % bd == 0, (d, bd)
+    d_tiles = d // bd
+    s_pad = sel.shape[0]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(d_tiles, s_pad),
+        in_specs=[
+            # blocks: pick tile sel[s]; index map returns block coords.
+            pl.BlockSpec((1, bm, bk), lambda j, s, sel, row, col: (sel[s], 0, 0)),
+            # h: slab (col_ids[s], j)
+            pl.BlockSpec((bk, bd), lambda j, s, sel, row, col: (col[s], j)),
+        ],
+        out_specs=pl.BlockSpec(
+            (bm, bd), lambda j, s, sel, row, col: (row[s], j)),
+    )
+
+    def body(sel_ref, row_ref, col_ref, blocks_ref, h_ref, out_ref):
+        s = pl.program_id(1)
+
+        @pl.when(jnp.logical_or(
+            s == 0, row_ref[s] != row_ref[jnp.maximum(s - 1, 0)]))
+        def _init():
+            out_ref[...] = jnp.zeros_like(out_ref)
+
+        out_ref[...] += jnp.dot(
+            blocks_ref[0], h_ref[...],
+            preferred_element_type=out_ref.dtype)
+
+    return pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_row_blocks * bm, d), h.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(sel, row_ids, col_ids, blocks, h)

@@ -1,0 +1,47 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels run in ``interpret=True``; on TPU the same
+call sites compile to Mosaic. ``default_backend()`` picks automatically, and
+``repro.core`` ops accept an explicit ``backend`` string everywhere.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.bcoo_spmm import bcoo_spmm as _bcoo_spmm_pallas
+from repro.kernels.gather_matmul import gather_matmul as _gather_matmul_pallas
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def default_backend() -> str:
+    """Pallas on TPU; pure-jnp reference path elsewhere."""
+    return "pallas" if on_tpu() else "jnp"
+
+
+def bcoo_spmm(blocks, sel, row_ids, col_ids, h, *, n_row_blocks, bm, bk,
+              bd: int = 512, interpret: bool | None = None):
+    if interpret is None:
+        interpret = not on_tpu()
+    return _bcoo_spmm_pallas(
+        blocks, sel, row_ids, col_ids, h,
+        n_row_blocks=n_row_blocks, bm=bm, bk=bk, bd=bd, interpret=interpret)
+
+
+def gather_matmul(x, g, idx, *, bk: int = 128, transpose_lhs: bool = True,
+                  interpret: bool | None = None):
+    if interpret is None:
+        interpret = not on_tpu()
+    return _gather_matmul_pallas(
+        x, g, idx, bk=bk, transpose_lhs=transpose_lhs, interpret=interpret)
+
+
+def flash_attention(q, k, v, *, q_offset=0, causal=True, window=None,
+                    interpret: bool | None = None):
+    from repro.kernels.flash_attention import flash_attention_fwd
+    if interpret is None:
+        interpret = not on_tpu()
+    return flash_attention_fwd(q, k, v, q_offset=q_offset, causal=causal,
+                               window=window, interpret=interpret)

@@ -1,0 +1,222 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver builds the step function (train / prefill /
+decode), abstract inputs (ShapeDtypeStructs — nothing is allocated), the
+sharding assignment from launch/shardings.py, then:
+
+    lowered  = jax.jit(step, in_shardings=…, out_shardings=…).lower(…)
+    compiled = lowered.compile()
+    print(compiled.memory_analysis())   # proves the cell fits 16 GB/chip
+    print(compiled.cost_analysis())     # FLOPs/bytes for §Roofline
+
+plus the collective-bytes HLO parse. Results land in
+benchmarks/artifacts/dryrun/<cell>.json for EXPERIMENTS.md.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
+        --shape train_4k [--multi-pod] [--all] [--devices 512]
+"""
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCHS, get_arch, input_specs, shape_applicable  # noqa: E402
+from repro.configs.shapes import SHAPES, microbatches  # noqa: E402
+from repro.launch.hlo_stats import collective_bytes  # noqa: E402
+from repro.launch.mesh import dp_axes, make_production_mesh  # noqa: E402
+from repro.launch.shardings import (batch_shardings, cache_shardings,  # noqa: E402
+                                    opt_shardings, param_shardings,
+                                    sanitize_shardings)
+from repro.models.lm.sharding import DECODE_RULES, TRAIN_RULES, mesh_context  # noqa: E402
+from repro.train.lm_steps import (abstract_cache, abstract_state,  # noqa: E402
+                                  make_decode_step, make_prefill_step,
+                                  make_train_step)
+from repro.train.optimizer import Adam  # noqa: E402
+
+ART = Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts" / \
+    "dryrun"
+
+
+def _tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree)
+               if hasattr(x, "size"))
+
+
+def lower_cell(arch: str, shape: str, *, multi_pod: bool = False,
+               mesh=None, save_hlo: bool = False, cfg_override=None,
+               microbatch_override: int | None = None) -> dict:
+    """Lower+compile one cell; returns the §Dry-run/§Roofline record."""
+    cfg = cfg_override if cfg_override is not None else get_arch(arch)
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape,
+                "multi_pod": multi_pod, "status": "skipped", "reason": why}
+
+    mesh = mesh if mesh is not None else \
+        make_production_mesh(multi_pod=multi_pod)
+    sp = SHAPES[shape]
+    dp = dp_axes(mesh, sp.global_batch)
+    opt = Adam(lr=3e-4)
+    specs = input_specs(cfg, shape)
+    n_mb = microbatch_override if microbatch_override is not None \
+        else microbatches(arch, shape)
+    if sp.kind == "train" and dp is not None:
+        # each microbatch must still divide the dp submesh
+        dp_size = 1
+        for a in dp:
+            dp_size *= int(mesh.shape[a])
+        n_mb = max(1, min(n_mb, sp.global_batch // dp_size))
+    t0 = time.perf_counter()
+
+    if sp.kind == "train":
+        params_s, opt_s = abstract_state(cfg, opt)
+        step = make_train_step(cfg, opt, n_mb)
+        p_sh = param_shardings(params_s, mesh)
+        o_sh = opt_shardings(opt_s, p_sh, mesh)
+        b_sh = batch_shardings(specs, mesh, dp)
+        rules = TRAIN_RULES
+        with mesh_context(mesh, rules):
+            lowered = jax.jit(
+                step,
+                in_shardings=(p_sh, o_sh, b_sh),
+                out_shardings=(p_sh, o_sh, NamedSharding(mesh, P())),
+                donate_argnums=(0, 1),
+            ).lower(params_s, opt_s, specs)
+    elif sp.kind == "prefill":
+        params_s, _ = abstract_state(cfg, opt)
+        step = make_prefill_step(cfg)
+        p_sh = param_shardings(params_s, mesh)
+        b_sh = batch_shardings(specs, mesh, dp)
+        cache_s = abstract_cache(cfg, sp.global_batch, sp.seq_len)
+        c_sh = sanitize_shardings(cache_shardings(cfg, mesh, dp), cache_s)
+        rules = DECODE_RULES
+        with mesh_context(mesh, rules):
+            lowered = jax.jit(
+                step,
+                in_shardings=(p_sh, b_sh),
+                out_shardings=(NamedSharding(mesh, P(dp)), c_sh),
+            ).lower(params_s, specs)
+    else:  # decode
+        params_s, _ = abstract_state(cfg, opt)
+        step = make_decode_step(cfg)
+        cache_s = abstract_cache(cfg, sp.global_batch, sp.seq_len)
+        p_sh = param_shardings(params_s, mesh)
+        b_sh = batch_shardings(specs, mesh, dp)
+        c_sh = sanitize_shardings(cache_shardings(cfg, mesh, dp), cache_s)
+        rules = DECODE_RULES
+        with mesh_context(mesh, rules):
+            lowered = jax.jit(
+                step,
+                in_shardings=(p_sh, c_sh, b_sh),
+                out_shardings=(NamedSharding(mesh, P(dp)), c_sh),
+                donate_argnums=(1,),
+            ).lower(params_s, cache_s, specs)
+
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    n_dev = mesh.devices.size
+    rec = {
+        "arch": arch, "shape": shape, "multi_pod": multi_pod,
+        "status": "ok",
+        "mesh": {a: int(mesh.shape[a]) for a in mesh.axis_names},
+        "devices": int(n_dev),
+        "seq_len": sp.seq_len, "global_batch": sp.global_batch,
+        "kind": sp.kind,
+        "microbatches": n_mb if sp.kind == "train" else 1,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "param_bytes_global": _tree_bytes(
+            abstract_state(cfg, opt)[0]),
+        "memory_analysis": {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes")
+            if hasattr(mem, k)
+        },
+        "cost_analysis": {k: float(v) for k, v in (cost or {}).items()
+                          if isinstance(v, (int, float))},
+        "collectives": coll,
+    }
+    if save_hlo:
+        ART.mkdir(parents=True, exist_ok=True)
+        tag = f"{arch}__{shape}__{'mp' if multi_pod else 'sp'}"
+        (ART / f"{tag}.hlo.txt").write_text(hlo)
+    return rec
+
+
+def save_record(rec: dict) -> Path:
+    ART.mkdir(parents=True, exist_ok=True)
+    tag = f"{rec['arch']}__{rec['shape']}__" \
+        f"{'mp' if rec['multi_pod'] else 'sp'}"
+    path = ART / f"{tag}.json"
+    path.write_text(json.dumps(rec, indent=1))
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+
+    archs = sorted(ARCHS) if args.all or not args.arch else [args.arch]
+    shapes = sorted(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) \
+        else [args.multi_pod]
+
+    failures = 0
+    for mp in meshes:
+        mesh = make_production_mesh(multi_pod=mp)
+        for arch in archs:
+            for shape in shapes:
+                tag = f"{arch}__{shape}__{'mp' if mp else 'sp'}"
+                if args.skip_done and (ART / f"{tag}.json").exists():
+                    print(f"[dryrun] {tag}: cached, skipping")
+                    continue
+                try:
+                    rec = lower_cell(arch, shape, multi_pod=mp, mesh=mesh,
+                                     save_hlo=args.save_hlo)
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape, "multi_pod": mp,
+                           "status": "error", "error": f"{type(e).__name__}:"
+                           f" {e}"}
+                    failures += 1
+                path = save_record(rec)
+                if rec["status"] == "ok":
+                    ma = rec["memory_analysis"]
+                    print(f"[dryrun] {tag}: OK compile={rec['compile_s']}s "
+                          f"temp={ma.get('temp_size_in_bytes', 0)/2**30:.2f}"
+                          f"GiB args={ma.get('argument_size_in_bytes', 0)/2**30:.2f}GiB "
+                          f"flops={rec['cost_analysis'].get('flops', 0):.3e} "
+                          f"coll={rec['collectives']['total_bytes']/2**30:.3f}GiB"
+                          f" -> {path.name}")
+                else:
+                    print(f"[dryrun] {tag}: {rec['status']} "
+                          f"{rec.get('reason', rec.get('error', ''))[:200]}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

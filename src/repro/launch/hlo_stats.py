@@ -1,0 +1,75 @@
+"""Collective-traffic statistics from post-SPMD HLO text (§Roofline input).
+
+cost_analysis() has no collective bytes, so we parse the optimized HLO of
+the compiled executable and sum the RESULT sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+instruction. Result-size is the standard proxy for per-device traffic
+(all-gather result ≈ bytes received per device; all-reduce moves ~2× operand
+in a ring — we report raw result bytes and fold algorithm factors into the
+roofline constants' error bar).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g. "  %x = bf16[16,4096,5120]{2,1,0} all-gather(...)"
+#      "  ROOT %t = (f32[8,128]{1,0}, f32[8]{0}) all-reduce(...)"
+_INSTR = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-kind and total result bytes of collective ops (one device's HLO).
+
+    ``-start`` ops are counted, ``-done`` skipped (same buffer).
+    """
+    out: dict = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for m in _INSTR.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        if f"{kind}-done(" in m.group(0):
+            continue
+        b = _shape_bytes(shape_str)
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += b
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    out["total_count"] = sum(v["count"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def op_histogram(hlo_text: str, top: int = 15) -> list[tuple[str, int]]:
+    """Crude opcode frequency histogram (perf-iteration diagnostics)."""
+    counts: dict[str, int] = defaultdict(int)
+    for m in re.finditer(r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)"
+                         r"\s*([a-z][a-z0-9-]+)\(", hlo_text):
+        counts[m.group(1)] += 1
+    return sorted(counts.items(), key=lambda kv: -kv[1])[:top]

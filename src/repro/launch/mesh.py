@@ -1,0 +1,34 @@
+"""Production mesh factory (a FUNCTION — importing never touches devices).
+
+Single pod: (data=16, model=16) — 256 chips (v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) — 512 chips.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(n_devices: int | None = None, model: int = 2):
+    """Small mesh over however many (host) devices exist — tests only."""
+    n = n_devices or len(jax.devices())
+    assert n % model == 0, (n, model)
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def dp_axes(mesh, global_batch: int):
+    """Mesh axes usable for the batch dim (must divide global_batch)."""
+    names = [a for a in ("pod", "data") if a in mesh.axis_names]
+    size = 1
+    kept = []
+    for a in names:
+        s = mesh.shape[a]
+        if global_batch % (size * s) == 0:
+            kept.append(a)
+            size *= s
+    return tuple(kept) if kept else None

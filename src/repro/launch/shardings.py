@@ -1,0 +1,203 @@
+"""Parameter / optimizer / batch / cache sharding rules (DESIGN.md §6).
+
+Params: FSDP over 'data' (d_model or d_ff dim) × TP over 'model'
+(heads/ffn/vocab dim); replicated over 'pod' (pure DP across pods — keeps
+param all-gathers on intra-pod ICI). Stacked scan params get a leading None.
+
+Caches (decode): batch over ('pod','data'), SEQUENCE over 'model'
+(sequence-parallel KV — GQA kv counts almost never divide TP=16).
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.lm.config import LMConfig
+
+
+# (path regex, spec for the TRAILING dims). First match wins. All name
+# alternatives are anchored to path-segment boundaries via (?:^|/).
+_B = r"(?:^|/)"
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    (_B + r"embed$",                    ("model", "data")),
+    (_B + r"unembed/w$",                ("data", "model")),
+    (_B + r"(wq|wk|wv)/w$",             ("data", "model")),
+    (_B + r"(wq|wk|wv)/b$",             ("model",)),
+    (_B + r"wo/w$",                     ("model", "data")),
+    (_B + r"wo/b$",                     (None,)),
+    # MoE: experts stacked on leading E dim (EP over 'model') — must match
+    # before the generic MLP rules below.
+    (_B + r"experts/(gate|up)/w$",      ("model", "data", None)),
+    (_B + r"experts/down/w$",           ("model", None, "data")),
+    (_B + r"experts/.*/b$",             ("model", None)),
+    (_B + r"router/w$",                 ("data", None)),
+    (_B + r"router/b$",                 (None,)),
+    (_B + r"(gate|up|ffn_gate|ffn_up)/w$",   ("data", "model")),
+    (_B + r"(down|ffn_down)/w$",        ("model", "data")),
+    (_B + r"(gate|up|ffn_gate|ffn_up)/b$",   ("model",)),
+    (_B + r"(down|ffn_down)/b$",        (None,)),
+    # MLA
+    (_B + r"w_dkv/w$",                  ("data", None)),
+    (_B + r"w_kr/w$",                   ("data", None)),
+    (_B + r"w_dq/w$",                   ("data", None)),
+    (_B + r"(w_uk|w_uv|w_uq|w_q)/w$",   (None, "model")),
+    # RG-LRU / conv
+    (_B + r"(in_gate|in_rec|wa|wx)/w$", ("data", "model")),
+    (_B + r"(in_gate|in_rec|wa|wx)/b$", ("model",)),
+    (_B + r"out/w$",                    ("model", "data")),
+    (_B + r"out/b$",                    (None,)),
+    (_B + r"conv_w$",                   (None, "model")),
+    (_B + r"conv_b$",                   ("model",)),
+    (_B + r"lambda$",                   ("model",)),
+    # xLSTM
+    (_B + r"wgate/w$",                  ("data", None)),
+    (_B + r"wgate/b$",                  (None,)),
+    (_B + r"r[zifo]$",                  (None, None, None)),
+    (_B + r"w[zifo]/w$",                ("data", "model")),
+    (_B + r"w[zifo]/b$",                ("model",)),
+    # norms, gates, everything small: replicate
+    (r".*",                             None),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _mesh_axes(mesh: Mesh, name):
+    if name is None:
+        return None
+    if name == "data":
+        # FSDP dim: spans pod+data on the multi-pod mesh (halves per-chip
+        # param/optimizer bytes for the 236B config; grads reduce-scatter
+        # hierarchically).
+        if "pod" in mesh.axis_names and "data" in mesh.axis_names:
+            return ("pod", "data")
+        return "data" if "data" in mesh.axis_names else None
+    return name if name in mesh.axis_names else None
+
+
+def param_spec(path: str, shape: tuple, mesh: Mesh) -> P:
+    ndim = len(shape)
+    for pat, trailing in _PARAM_RULES:
+        if re.search(pat, path):
+            if trailing is None:
+                return P()
+            axes = [_mesh_axes(mesh, a) for a in trailing]
+            pad = [None] * (ndim - len(axes))
+            if ndim < len(axes):
+                return P()
+            spec = pad + axes
+            # Divisibility safety net: drop axes the dim can't host.
+            for i, a in enumerate(spec):
+                if a is None:
+                    continue
+                size = mesh.shape[a] if isinstance(a, str) else \
+                    int(jax.numpy.prod(jax.numpy.asarray(
+                        [mesh.shape[x] for x in a])))
+                if shape[i] % size != 0:
+                    spec[i] = None
+            return P(*spec)
+    return P()
+
+
+def param_shardings(params_abstract, mesh: Mesh):
+    def assign(path, leaf):
+        return NamedSharding(mesh, param_spec(_path_str(path),
+                                              tuple(getattr(leaf, "shape",
+                                                            ())), mesh))
+    return jax.tree_util.tree_map_with_path(assign, params_abstract)
+
+
+def opt_shardings(opt_state_abstract, params_shardings, mesh: Mesh):
+    """m/v mirror params; count replicated."""
+    rep = NamedSharding(mesh, P())
+    return {
+        "m": params_shardings,
+        "v": params_shardings,
+        "count": rep,
+    }
+
+
+def _axis_size(mesh: Mesh, a) -> int:
+    if isinstance(a, str):
+        return int(mesh.shape[a])
+    n = 1
+    for x in a:
+        n *= int(mesh.shape[x])
+    return n
+
+
+def sanitize_shardings(sh_tree, abstract_tree):
+    """Drop sharding axes whose mesh size doesn't divide the dim."""
+    def fix(sh, ab):
+        if not isinstance(sh, NamedSharding):
+            return sh
+        shape = tuple(getattr(ab, "shape", ()))
+        spec = list(sh.spec) + [None] * (len(shape) - len(sh.spec))
+        for i, a in enumerate(spec):
+            if a is not None and shape[i] % _axis_size(sh.mesh, a) != 0:
+                spec[i] = None
+        return NamedSharding(sh.mesh, P(*spec))
+    return jax.tree.map(fix, sh_tree, abstract_tree,
+                        is_leaf=lambda x: isinstance(x, NamedSharding))
+
+
+def batch_shardings(batch_abstract, mesh: Mesh, dp) -> dict:
+    out = {}
+    for k, v in batch_abstract.items():
+        spec = [dp] + [None] * (v.ndim - 1)
+        out[k] = NamedSharding(mesh, P(*spec))
+    return out
+
+
+# ------------------------------- caches -------------------------------------
+
+def _layer_cache_spec(cfg: LMConfig, kind: str, dp, mesh: Mesh) -> dict:
+    tp = _mesh_axes(mesh, "model")
+    if kind in ("attn", "attn_moe"):
+        if cfg.mla is not None:
+            return {"ckv": P(dp, tp, None), "krope": P(dp, tp, None)}
+        return {"k": P(dp, tp, None, None), "v": P(dp, tp, None, None)}
+    if kind == "local":
+        return {"k": P(dp, tp, None, None), "v": P(dp, tp, None, None),
+                "pos": P(None)}
+    if kind == "cross":
+        return {"k": P(dp, tp, None, None), "v": P(dp, tp, None, None)}
+    if kind == "rglru":
+        return {"h": P(dp, tp), "conv": P(dp, None, tp)}
+    if kind == "mlstm":
+        return {"C": P(dp, None, None, None), "n": P(dp, None, None),
+                "m": P(dp, None), "conv": P(dp, None, tp)}
+    if kind == "slstm":
+        return {"c": P(dp, None, None), "n": P(dp, None, None),
+                "h": P(dp, None, None), "m": P(dp, None, None)}
+    raise ValueError(kind)
+
+
+def cache_shardings(cfg: LMConfig, mesh: Mesh, dp):
+    def pad_stack(tree):  # scanned blocks: leading repeats dim
+        return jax.tree.map(
+            lambda s: P(*([None] + list(s))), tree,
+            is_leaf=lambda x: isinstance(x, P))
+
+    specs = {
+        "prefix": [_layer_cache_spec(cfg, k, dp, mesh) for k in cfg.prefix],
+        "blocks": pad_stack(tuple(_layer_cache_spec(cfg, k, dp, mesh)
+                                  for k in cfg.pattern))
+        if cfg.repeats else (),
+        "suffix": [_layer_cache_spec(cfg, k, dp, mesh) for k in cfg.suffix],
+        "len": P(),
+    }
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

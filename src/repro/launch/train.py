@@ -1,0 +1,135 @@
+"""CLI training driver.
+
+GNN (the paper's models):
+    PYTHONPATH=src python -m repro.launch.train gnn --model gcn \
+        --dataset reddit --scale 0.01 --rsc --budget 0.1 --epochs 100
+
+LM (assigned architectures; reduced dims on CPU via --smoke):
+    PYTHONPATH=src python -m repro.launch.train lm --arch qwen2-0.5b \
+        --smoke --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs import get_arch, make_batch, smoke_config
+from repro.graphs.datasets import DATASETS, load_dataset
+from repro.models.lm.backbone import init_params
+from repro.train.lm_steps import make_train_step
+from repro.train.loop import GNNTrainer, TrainConfig
+from repro.train.optimizer import Adam
+
+
+def run_gnn(args) -> dict:
+    spec = DATASETS[args.dataset]
+    g = load_dataset(args.dataset, scale=args.scale, seed=args.seed)
+    cfg = TrainConfig(
+        model=args.model, n_layers=args.layers, hidden=args.hidden,
+        epochs=args.epochs, lr=args.lr, dropout=args.dropout,
+        metric=spec.metric, rsc=args.rsc, budget=args.budget,
+        caching=not args.no_caching, switching=not args.no_switching,
+        strategy=args.strategy, block=args.block, seed=args.seed,
+        backend=args.backend)
+    tr = GNNTrainer(cfg, g)
+    t0 = time.perf_counter()
+    res = tr.train(verbose=args.verbose)
+    res["wall_s"] = time.perf_counter() - t0
+    print(json.dumps({
+        "model": args.model, "dataset": args.dataset,
+        "rsc": args.rsc, "budget": args.budget,
+        "best_test": res["best_test"], "wall_s": round(res["wall_s"], 2),
+        "flops_fraction": res["flops_fraction"],
+    }))
+    return res
+
+
+def run_lm(args) -> dict:
+    cfg = smoke_config(args.arch) if args.smoke else get_arch(args.arch)
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(key, cfg)
+    opt = Adam(lr=args.lr, clip_norm=1.0)
+    opt_state = opt.init(params)
+    rsc = {"keep_frac": args.rsc_keep} if args.rsc else None
+    step = jax.jit(make_train_step(cfg, opt, args.microbatches, rsc=rsc))
+    ckpt = Checkpointer(args.ckpt_dir, keep=2) if args.ckpt_dir else None
+
+    start = 0
+    if ckpt and ckpt.latest_step() is not None:
+        start, (params, opt_state) = ckpt.restore((params, opt_state))
+        print(f"[train] resumed from step {start}")
+
+    losses = []
+    for i in range(start, args.steps):
+        batch = make_batch(cfg, "train_4k", args.batch, args.seq, seed=i)
+        t0 = time.perf_counter()
+        params, opt_state, loss = step(params, opt_state, batch)
+        loss = float(loss)
+        losses.append(loss)
+        if args.verbose and i % 10 == 0:
+            print(f"step {i:4d} loss {loss:.4f} "
+                  f"({time.perf_counter() - t0:.2f}s)")
+        if ckpt and (i + 1) % args.ckpt_every == 0:
+            ckpt.save(i + 1, (params, opt_state))
+    if ckpt:
+        ckpt.save(args.steps, (params, opt_state))
+        ckpt.wait()
+    assert np.isfinite(losses[-1])
+    print(json.dumps({"arch": cfg.name, "final_loss": losses[-1],
+                      "first_loss": losses[0], "steps": len(losses)}))
+    return {"losses": losses, "params": params}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    g = sub.add_parser("gnn")
+    g.add_argument("--model", default="gcn",
+                   choices=["gcn", "graphsage", "gcnii"])
+    g.add_argument("--dataset", default="reddit", choices=sorted(DATASETS))
+    g.add_argument("--scale", type=float, default=0.005)
+    g.add_argument("--layers", type=int, default=3)
+    g.add_argument("--hidden", type=int, default=256)
+    g.add_argument("--epochs", type=int, default=200)
+    g.add_argument("--lr", type=float, default=0.01)
+    g.add_argument("--dropout", type=float, default=0.5)
+    g.add_argument("--rsc", action="store_true")
+    g.add_argument("--budget", type=float, default=0.1)
+    g.add_argument("--no-caching", action="store_true")
+    g.add_argument("--no-switching", action="store_true")
+    g.add_argument("--strategy", default="greedy",
+                   choices=["greedy", "uniform"])
+    g.add_argument("--block", type=int, default=64)
+    g.add_argument("--backend", default="jnp")
+    g.add_argument("--seed", type=int, default=0)
+    g.add_argument("--verbose", action="store_true")
+    g.set_defaults(fn=run_gnn)
+
+    l = sub.add_parser("lm")
+    l.add_argument("--arch", required=True)
+    l.add_argument("--smoke", action="store_true")
+    l.add_argument("--steps", type=int, default=50)
+    l.add_argument("--batch", type=int, default=2)
+    l.add_argument("--seq", type=int, default=64)
+    l.add_argument("--lr", type=float, default=3e-4)
+    l.add_argument("--microbatches", type=int, default=1)
+    l.add_argument("--rsc", action="store_true")
+    l.add_argument("--rsc-keep", type=float, default=0.5)
+    l.add_argument("--ckpt-dir", default=None)
+    l.add_argument("--ckpt-every", type=int, default=20)
+    l.add_argument("--seed", type=int, default=0)
+    l.add_argument("--verbose", action="store_true")
+    l.set_defaults(fn=run_lm)
+
+    args = ap.parse_args()
+    args.fn(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""GNN models (pure-JAX pytree modules): GCN, GraphSAGE(MEAN), GCNII."""
+from repro.models.gnn.common import GraphOperands, build_operands
+from repro.models.gnn import gcn, graphsage, gcnii
+
+MODELS = {"gcn": gcn, "graphsage": graphsage, "gcnii": gcnii}
+
+__all__ = ["GraphOperands", "build_operands", "gcn", "graphsage", "gcnii",
+           "MODELS"]

@@ -1,0 +1,146 @@
+"""Shared GNN plumbing: operands, layers, taps.
+
+The TAP mechanism: every SpMM output gets a zero-valued additive ``tap``
+array. ``jax.grad`` w.r.t. the taps yields exactly the backward operand
+∇H^{(l+1)} of each sparse op — the quantity Eq. 4a scores need — without
+instrumenting autodiff internals. The train step reduces taps' gradients to
+row norms inside the same jit (the full (N, d) arrays never leave device).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.plan import SamplePlan, full_plan
+from repro.core.rsc_spmm import exact_spmm, rsc_spmm
+from repro.graphs.synthetic import GraphData
+from repro.sparse.bcoo import BlockCOO, BlockMeta, csr_to_bcoo, \
+    degree_sort_permutation
+from repro.sparse.topology import mean_normalize, sym_normalize
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["a", "at", "am", "amt", "features", "labels", "train_mask",
+                 "val_mask", "test_mask"],
+    meta_fields=["n_valid", "num_classes", "multilabel"],
+)
+@dataclasses.dataclass(frozen=True)
+class GraphOperands:
+    """Device-resident graph operands (padded to block multiples)."""
+
+    a: BlockCOO          # sym-normalized Ã (GCN/GCNII propagation)
+    at: BlockCOO         # Ãᵀ
+    am: BlockCOO         # mean-normalized D⁻¹A (GraphSAGE, App. A.3)
+    amt: BlockCOO        # (D⁻¹A)ᵀ
+    features: jax.Array  # (N_pad, d_in)
+    labels: jax.Array    # (N_pad,) int32 or (N_pad, C) f32
+    train_mask: jax.Array
+    val_mask: jax.Array
+    test_mask: jax.Array
+    n_valid: int
+    num_classes: int
+    multilabel: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class OperandMeta:
+    """Host metadata of the backward operands, for the PlanCache."""
+
+    at_meta: BlockMeta
+    amt_meta: BlockMeta
+    a_fro: float
+    am_fro: float
+
+
+def build_operands(
+    g: GraphData, bm: int = 128, bk: int = 128, degree_sort: bool = True,
+) -> tuple[GraphOperands, OperandMeta]:
+    adj = g.adj
+    feats, labels = g.features, g.labels
+    tr, va, te = g.train_mask, g.val_mask, g.test_mask
+    if degree_sort:
+        perm = degree_sort_permutation(adj)
+        adj = adj.permute(perm)
+        feats, labels = feats[perm], labels[perm]
+        tr, va, te = tr[perm], va[perm], te[perm]
+
+    a_csr = sym_normalize(adj)
+    am_csr = mean_normalize(adj)
+    a, _ = csr_to_bcoo(a_csr, bm, bk)
+    at, at_meta = csr_to_bcoo(a_csr.transpose(), bm, bk)
+    am, _ = csr_to_bcoo(am_csr, bm, bk)
+    amt, amt_meta = csr_to_bcoo(am_csr.transpose(), bm, bk)
+
+    n_pad = a.n_rows
+    pad = n_pad - g.n
+
+    def padf(x, fill=0):
+        width = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+        return np.pad(x, width, constant_values=fill)
+
+    labels_dev = (jnp.asarray(padf(labels.astype(np.float32)))
+                  if g.multilabel
+                  else jnp.asarray(padf(labels.astype(np.int32))))
+    ops = GraphOperands(
+        a=a, at=at, am=am, amt=amt,
+        features=jnp.asarray(padf(feats)),
+        labels=labels_dev,
+        train_mask=jnp.asarray(padf(tr)),
+        val_mask=jnp.asarray(padf(va)),
+        test_mask=jnp.asarray(padf(te)),
+        n_valid=g.n,
+        num_classes=g.num_classes,
+        multilabel=g.multilabel,
+    )
+    meta = OperandMeta(
+        at_meta=at_meta, amt_meta=amt_meta,
+        a_fro=float(np.sqrt(np.sum(a_csr.val.astype(np.float64) ** 2))),
+        am_fro=float(np.sqrt(np.sum(am_csr.val.astype(np.float64) ** 2))),
+    )
+    return ops, meta
+
+
+def spmm_op(a: BlockCOO, at: BlockCOO, h: jax.Array,
+            plan: SamplePlan | None, backend: str) -> jax.Array:
+    """Dispatch: RSC (sampled backward) if a plan is supplied, exact else."""
+    if plan is None:
+        return exact_spmm(a, at, h, backend)
+    return rsc_spmm(a, at, plan, h, backend)
+
+
+# ------------------------------ nn primitives ------------------------------
+
+def dense_init(key, d_in, d_out, scale=None):
+    scale = scale if scale is not None else float(np.sqrt(2.0 / d_in))
+    return {"w": jax.random.normal(key, (d_in, d_out), jnp.float32) * scale,
+            "b": jnp.zeros((d_out,), jnp.float32)}
+
+
+def dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def batchnorm_init(d):
+    return {"g": jnp.ones((d,), jnp.float32),
+            "b": jnp.zeros((d,), jnp.float32)}
+
+
+def batchnorm(p, x, mask):
+    """BatchNorm over valid nodes (full-batch graph training)."""
+    m = mask.astype(jnp.float32)[:, None]
+    cnt = jnp.maximum(jnp.sum(m), 1.0)
+    mu = jnp.sum(x * m, axis=0) / cnt
+    var = jnp.sum(((x - mu) ** 2) * m, axis=0) / cnt
+    return ((x - mu) / jnp.sqrt(var + 1e-5)) * p["g"] + p["b"]
+
+
+def dropout(x, rate, key, train):
+    if not train or rate == 0.0:
+        return x
+    keep = jax.random.bernoulli(key, 1.0 - rate, x.shape)
+    return jnp.where(keep, x / (1.0 - rate), 0.0)

@@ -1,0 +1,275 @@
+"""Attention for the LM stack: GQA / sliding-window / gated cross-attention.
+
+One flash-style kv-chunked kernel (`flash_attention`, pure JAX online
+softmax over KV chunks, rematerialized) serves train, prefill and decode —
+the chunking keeps the (tq × tk) logits tensor out of HBM, which is what
+lets prefill_32k / train_4k fit the 16 GB/chip budget (DESIGN.md §7).
+
+Caches:
+  full  : {"k","v": (b, S, n_kv, hd)} written at absolute positions.
+  local : ring buffer {"k","v": (b, W, n_kv, hd), "pos": (W,) int32} —
+          "pos" stores each slot's absolute position (-1 = empty), which
+          makes wraparound masking trivial.
+  cross : {"k","v": (b, S_cross, n_kv, hd)} computed once at prefill.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm.config import LMConfig
+from repro.models.lm.layers import (apply_norm, apply_rope, linear,
+                                    linear_init, norm_init, pdtype)
+from repro.models.lm.sharding import shard
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg: LMConfig, kind: str = "full") -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": linear_init(ks[0], d, cfg.n_heads * hd, dt, bias=cfg.qkv_bias),
+        "wk": linear_init(ks[1], d, cfg.n_kv * hd, dt, bias=cfg.qkv_bias),
+        "wv": linear_init(ks[2], d, cfg.n_kv * hd, dt, bias=cfg.qkv_bias),
+        "wo": linear_init(ks[3], cfg.n_heads * hd, d, dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = norm_init(hd)
+        p["k_norm"] = norm_init(hd)
+    if kind == "cross":
+        p["gate"] = jnp.zeros((), jnp.float32)  # tanh-gated (llama-vision)
+    return p
+
+
+def flash_attention(
+    q: jax.Array,            # (b, tq, nq, hd)
+    k: jax.Array,            # (b, tk, nkv, hd)
+    v: jax.Array,            # (b, tk, nkv, hd)
+    *,
+    q_positions: jax.Array | None,   # (tq,) absolute; None = no causal mask
+    kv_positions: jax.Array,         # (tk,) absolute (-1 ⇒ invalid slot)
+    window: int | None = None,
+    chunk: int = 1024,
+    remat_chunks: bool = True,
+) -> jax.Array:
+    b, tq, nq, hd = q.shape
+    tk, nkv = k.shape[1], k.shape[2]
+    hv = v.shape[-1]          # may differ from hd (MLA: qk 192, v 128)
+    g = nq // nkv
+    scale = hd ** -0.5
+    qg = (q.astype(jnp.float32) * scale).reshape(b, tq, nkv, g, hd)
+
+    chunk = min(chunk, tk)
+    if tk % chunk:  # pad KV to a chunk multiple with masked (-1) positions
+        pad = chunk - tk % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, (0, pad), constant_values=-1)
+        tk += pad
+    n_chunks = tk // chunk
+    kc = k.reshape(b, n_chunks, chunk, nkv, hd)
+    vc = v.reshape(b, n_chunks, chunk, nkv, hv)
+    pc = kv_positions.reshape(n_chunks, chunk)
+
+    def chunk_step(carry, xs):
+        m, l, acc = carry
+        kch, vch, pch = xs
+        s = jnp.einsum("btkgh,bckh->btkgc", qg, kch.astype(jnp.float32))
+        mask = (pch >= 0)[None, None, None, None, :]
+        if q_positions is not None:
+            ok = pch[None, :] <= q_positions[:, None]        # (tq, chunk)
+            if window is not None:
+                ok &= pch[None, :] > q_positions[:, None] - window
+            mask = mask & ok[None, :, None, None, :]
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * alpha + p.sum(-1)
+        pv = jnp.einsum("btkgc,bckh->btkgh", p, vch.astype(jnp.float32))
+        acc = acc * alpha[..., None] + pv
+        return (m_new, l, acc), None
+
+    if remat_chunks:
+        chunk_step = jax.checkpoint(chunk_step)
+
+    init = (jnp.full((b, tq, nkv, g), NEG_INF, jnp.float32),
+            jnp.zeros((b, tq, nkv, g), jnp.float32),
+            jnp.zeros((b, tq, nkv, g, hv), jnp.float32))
+    from repro.models.lm.flags import scan_unroll
+    (m, l, acc), _ = jax.lax.scan(
+        chunk_step, init,
+        (kc.swapaxes(0, 1), vc.swapaxes(0, 1), pc), unroll=scan_unroll())
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, tq, nq, hv).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,            # (b, 1, nq, hd)
+    k: jax.Array,            # (b, S, nkv, hd) — seq possibly TP-sharded
+    v: jax.Array,            # (b, S, nkv, hv)
+    kv_positions: jax.Array,  # (S,) absolute (-1 ⇒ invalid)
+    q_position: jax.Array,   # scalar
+    window: int | None = None,
+) -> jax.Array:
+    """Single-token attention, SEQUENCE-PARALLEL over the KV cache.
+
+    The flash chunk-scan re-laid-out the seq-sharded cache every chunk
+    (EXPERIMENTS.md §Perf H3); the direct form keeps scores/probs sharded on
+    S — the only cross-device traffic is the softmax max/sum and the output
+    partial-sum, all (b, heads)-sized.
+    """
+    b, _, nq, hd = q.shape
+    S, nkv = k.shape[1], k.shape[2]
+    hv = v.shape[-1]
+    g = nq // nkv
+    qf = (q.astype(jnp.float32) * hd ** -0.5).reshape(b, nkv, g, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qf, k.astype(jnp.float32))
+    ok = kv_positions >= 0
+    if q_position is not None:
+        ok &= kv_positions <= q_position
+        if window is not None:
+            ok &= kv_positions > q_position - window
+    s = jnp.where(ok[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p, v.astype(jnp.float32))
+    return out.reshape(b, 1, nq, hv).astype(q.dtype)
+
+
+def _project_qkv(p, cfg: LMConfig, x, positions):
+    b, t, _ = x.shape
+    hd = cfg.hd
+    q = linear(p["wq"], x).reshape(b, t, cfg.n_heads, hd)
+    k = linear(p["wk"], x).reshape(b, t, cfg.n_kv, hd)
+    v = linear(p["wv"], x).reshape(b, t, cfg.n_kv, hd)
+    if cfg.qk_norm:
+        q = apply_norm(p["q_norm"], q, cfg.norm_eps)
+        k = apply_norm(p["k_norm"], k, cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    v = shard(v, "batch", "seq", "kv_heads", None)
+    return q, k, v
+
+
+def self_attention(
+    p, cfg: LMConfig, x, positions, *,
+    cache: dict | None = None,
+    cache_len: jax.Array | None = None,
+    window: int | None = None,
+    mode: str = "train",
+):
+    """Returns (out, new_cache). Modes: train | prefill | decode."""
+    b, t, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, positions)
+
+    if mode == "train":
+        kv_pos = positions
+        out = flash_attention(q, k, v, q_positions=positions,
+                              kv_positions=kv_pos, window=window,
+                              chunk=cfg.attn_chunk)
+        new_cache = None
+    elif mode == "prefill" and jax.default_backend() == "tpu":
+        # Production TPU path: Pallas flash kernel (VMEM-resident logits).
+        from repro.kernels import ops as kops
+        if window is None:
+            new_cache = {"k": shard(k, "batch", "kv_seq", "kv_heads", None),
+                         "v": shard(v, "batch", "kv_seq", "kv_heads", None)}
+        else:
+            w = min(window, t)
+            slots = positions[-w:] % window
+            kr = jnp.zeros((b, window, cfg.n_kv, cfg.hd), k.dtype)
+            vr = jnp.zeros_like(kr)
+            pos_buf = jnp.full((window,), -1, jnp.int32)
+            kr = kr.at[:, slots].set(k[:, -w:])
+            vr = vr.at[:, slots].set(v[:, -w:])
+            pos_buf = pos_buf.at[slots].set(positions[-w:].astype(jnp.int32))
+            new_cache = {"k": kr, "v": vr, "pos": pos_buf}
+        out = kops.flash_attention(q, k, v, causal=True, window=window)
+    elif mode == "prefill":
+        if window is None:
+            new_cache = {"k": shard(k, "batch", "kv_seq", "kv_heads", None),
+                         "v": shard(v, "batch", "kv_seq", "kv_heads", None)}
+        else:
+            w = min(window, t)
+            slots = positions[-w:] % window
+            kr = jnp.zeros((b, window, cfg.n_kv, cfg.hd), k.dtype)
+            vr = jnp.zeros_like(kr)
+            pos_buf = jnp.full((window,), -1, jnp.int32)
+            kr = kr.at[:, slots].set(k[:, -w:])
+            vr = vr.at[:, slots].set(v[:, -w:])
+            pos_buf = pos_buf.at[slots].set(positions[-w:].astype(jnp.int32))
+            new_cache = {"k": kr, "v": vr, "pos": pos_buf}
+        out = flash_attention(q, k, v, q_positions=positions,
+                              kv_positions=positions, window=window,
+                              chunk=cfg.attn_chunk)
+    else:  # decode: t == 1, write into cache then attend over it
+        assert cache is not None and cache_len is not None
+        if window is None:
+            kb = jax.lax.dynamic_update_slice(
+                cache["k"], k, (0, cache_len, 0, 0))
+            vb = jax.lax.dynamic_update_slice(
+                cache["v"], v, (0, cache_len, 0, 0))
+            s_max = kb.shape[1]
+            kv_pos = jnp.arange(s_max, dtype=jnp.int32)
+            kv_pos = jnp.where(kv_pos <= cache_len, kv_pos, -1)
+            new_cache = {"k": kb, "v": vb}
+        else:
+            slot = cache_len % window
+            kb = jax.lax.dynamic_update_slice(
+                cache["k"], k, (0, slot, 0, 0))
+            vb = jax.lax.dynamic_update_slice(
+                cache["v"], v, (0, slot, 0, 0))
+            pos_buf = jax.lax.dynamic_update_slice(
+                cache["pos"], cache_len[None].astype(jnp.int32), (slot,))
+            kv_pos = pos_buf
+            new_cache = {"k": kb, "v": vb, "pos": pos_buf}
+        out = decode_attention(q, kb, vb, kv_pos, cache_len, window=window)
+
+    out = out.reshape(b, t, cfg.n_heads * cfg.hd)
+    out = linear(p["wo"], out)
+    return shard(out, "batch", "seq", "embed"), new_cache
+
+
+def cross_attention(
+    p, cfg: LMConfig, x, cross_states, *,
+    cache: dict | None = None,
+    mode: str = "train",
+):
+    """Gated cross-attention (llama-3.2-vision layers). No causal mask."""
+    b, t, _ = x.shape
+    hd = cfg.hd
+    q = linear(p["wq"], x).reshape(b, t, cfg.n_heads, hd)
+    if cfg.qk_norm:
+        q = apply_norm(p["q_norm"], q, cfg.norm_eps)
+    q = shard(q, "batch", "seq", "heads", None)
+
+    if cache is not None and mode == "decode":
+        k, v = cache["k"], cache["v"]
+        new_cache = cache
+    else:
+        s = cross_states.shape[1]
+        k = linear(p["wk"], cross_states).reshape(b, s, cfg.n_kv, hd)
+        v = linear(p["wv"], cross_states).reshape(b, s, cfg.n_kv, hd)
+        if cfg.qk_norm:
+            k = apply_norm(p["k_norm"], k, cfg.norm_eps)
+        k = shard(k, "batch", "kv_seq", "kv_heads", None)
+        v = shard(v, "batch", "kv_seq", "kv_heads", None)
+        new_cache = {"k": k, "v": v} if mode == "prefill" else None
+
+    s = k.shape[1]
+    kv_pos = jnp.arange(s, dtype=jnp.int32)
+    if mode == "decode":
+        out = decode_attention(q, k, v, kv_pos, None)
+    else:
+        out = flash_attention(q, k, v, q_positions=None,
+                              kv_positions=kv_pos, chunk=cfg.attn_chunk,
+                              remat_chunks=(mode == "train"))
+    out = out.reshape(b, t, cfg.n_heads * hd)
+    out = linear(p["wo"], out) * jnp.tanh(p["gate"]).astype(x.dtype)
+    return shard(out, "batch", "seq", "embed"), new_cache

@@ -1,0 +1,286 @@
+"""LM backbone: embed → (prefix + scanned super-blocks + suffix) → logits.
+
+The repeating ``cfg.pattern`` super-block is scanned with jax.lax.scan over
+stacked params (+ per-super-block jax.checkpoint in training), keeping HLO
+size O(1) in depth — required to compile 60-layer/512-device configs on the
+CPU dry-run host (DESIGN.md §5). Ragged depths use prefix/suffix layers
+outside the scan (e.g. recurrentgemma's 38 = 12×(rec,rec,local) + 2 rec).
+
+Modes: train (no cache) | prefill (build cache, last-token logits) |
+decode (one token against the cache).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm.attention import attn_init, cross_attention, \
+    self_attention
+from repro.models.lm.config import LMConfig
+from repro.models.lm.flags import scan_unroll
+from repro.models.lm.layers import apply_norm, linear_init, mlp_apply, \
+    mlp_init, norm_init, pdtype
+from repro.models.lm.mla import mla_attention, mla_init
+from repro.models.lm.moe import moe_apply, moe_init
+from repro.models.lm.rglru import rglru_block, rglru_init
+from repro.models.lm.sharding import shard
+from repro.models.lm.xlstm import mlstm_block, mlstm_init, slstm_block, \
+    slstm_init
+
+
+# ------------------------------- init --------------------------------------
+
+def layer_init(key, cfg: LMConfig, kind: str) -> dict:
+    ks = jax.random.split(key, 4)
+    if kind in ("attn", "attn_moe", "local", "cross"):
+        if cfg.mla is not None and kind != "cross":
+            attn = mla_init(ks[0], cfg)
+        else:
+            attn = attn_init(ks[0], cfg, "cross" if kind == "cross" else
+                             "full")
+        p = {"ln1": norm_init(cfg.d_model, cfg.norm), "attn": attn,
+             "ln2": norm_init(cfg.d_model, cfg.norm)}
+        if kind == "attn_moe":
+            p["moe"] = moe_init(ks[1], cfg)
+        elif cfg.mlp != "none":
+            d_ff = cfg.moe.d_ff_dense if (cfg.moe and kind == "attn") \
+                else cfg.d_ff
+            p["mlp"] = mlp_init(ks[1], cfg, d_ff)
+        if kind == "cross":
+            p["ffn_gate"] = jnp.zeros((), jnp.float32)
+        return p
+    if kind == "rglru":
+        return {"ln1": norm_init(cfg.d_model, cfg.norm),
+                "rec": rglru_init(ks[0], cfg),
+                "ln2": norm_init(cfg.d_model, cfg.norm),
+                "mlp": mlp_init(ks[1], cfg)}
+    if kind == "mlstm":
+        return {"cell": mlstm_init(ks[0], cfg)}
+    if kind == "slstm":
+        return {"cell": slstm_init(ks[0], cfg)}
+    raise ValueError(kind)
+
+
+def init_params(key, cfg: LMConfig) -> dict:
+    cfg.validate()
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    params: dict[str, Any] = {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab, d), jnp.float32)
+                  * d ** -0.5).astype(dt),
+        "final_norm": norm_init(d, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = linear_init(ks[1], d, cfg.vocab, dt)
+    params["prefix"] = [layer_init(jax.random.fold_in(ks[2], i), cfg, kind)
+                        for i, kind in enumerate(cfg.prefix)]
+    params["suffix"] = [layer_init(jax.random.fold_in(ks[3], i), cfg, kind)
+                        for i, kind in enumerate(cfg.suffix)]
+
+    def sb_init(k):
+        kk = jax.random.split(k, len(cfg.pattern))
+        return tuple(layer_init(kk[i], cfg, kind)
+                     for i, kind in enumerate(cfg.pattern))
+
+    sbs = [sb_init(jax.random.fold_in(ks[4], r)) for r in range(cfg.repeats)]
+    params["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *sbs)
+    return params
+
+
+# ------------------------------- cache --------------------------------------
+
+def layer_cache(cfg: LMConfig, kind: str, batch: int, max_len: int) -> Any:
+    dt = pdtype(cfg)
+    hd, nkv = cfg.hd, cfg.n_kv
+    if kind in ("attn", "attn_moe"):
+        if cfg.mla is not None:
+            m = cfg.mla
+            return {"ckv": jnp.zeros((batch, max_len, m.kv_lora), dt),
+                    "krope": jnp.zeros((batch, max_len, m.qk_rope), dt)}
+        return {"k": jnp.zeros((batch, max_len, nkv, hd), dt),
+                "v": jnp.zeros((batch, max_len, nkv, hd), dt)}
+    if kind == "local":
+        w = min(cfg.local_window, max_len)
+        return {"k": jnp.zeros((batch, w, nkv, hd), dt),
+                "v": jnp.zeros((batch, w, nkv, hd), dt),
+                "pos": jnp.full((w,), -1, jnp.int32)}
+    if kind == "cross":
+        return {"k": jnp.zeros((batch, cfg.cross_seq, nkv, hd), dt),
+                "v": jnp.zeros((batch, cfg.cross_seq, nkv, hd), dt)}
+    if kind == "rglru":
+        w = cfg.lru_width or cfg.d_model
+        return {"h": jnp.zeros((batch, w), dt),
+                "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dt)}
+    if kind == "mlstm":
+        ud = 2 * cfg.d_model
+        nh = cfg.mlstm_heads
+        return {"C": jnp.zeros((batch, nh, ud // nh, ud // nh), jnp.float32),
+                "n": jnp.zeros((batch, nh, ud // nh), jnp.float32),
+                "m": jnp.full((batch, nh), -1e30, jnp.float32),
+                "conv": jnp.zeros((batch, cfg.conv_width - 1, ud), dt)}
+    if kind == "slstm":
+        nh = cfg.slstm_heads
+        dh = cfg.d_model // nh
+        return {"c": jnp.zeros((batch, nh, dh), jnp.float32),
+                "n": jnp.zeros((batch, nh, dh), jnp.float32),
+                "h": jnp.zeros((batch, nh, dh), jnp.float32),
+                "m": jnp.full((batch, nh, dh), -1e30, jnp.float32)}
+    raise ValueError(kind)
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int) -> dict:
+    def sb_cache():
+        return tuple(layer_cache(cfg, k, batch, max_len)
+                     for k in cfg.pattern)
+
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                           *[sb_cache() for _ in range(cfg.repeats)]) \
+        if cfg.repeats else ()
+    return {
+        "prefix": [layer_cache(cfg, k, batch, max_len) for k in cfg.prefix],
+        "blocks": stacked,
+        "suffix": [layer_cache(cfg, k, batch, max_len) for k in cfg.suffix],
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+# ------------------------------- apply --------------------------------------
+
+def layer_apply(p, cfg: LMConfig, kind: str, h, positions, *,
+                cache=None, cache_len=None, cross_states=None,
+                mode="train", rsc=None):
+    if kind in ("attn", "attn_moe", "local"):
+        hn = apply_norm(p["ln1"], h, cfg.norm_eps)
+        if cfg.mla is not None:
+            a, c = mla_attention(p["attn"], cfg, hn, positions,
+                                 cache=cache, cache_len=cache_len, mode=mode)
+        else:
+            a, c = self_attention(
+                p["attn"], cfg, hn, positions, cache=cache,
+                cache_len=cache_len,
+                window=cfg.local_window if kind == "local" else None,
+                mode=mode)
+        h = h + a
+        hn = apply_norm(p["ln2"], h, cfg.norm_eps)
+        if kind == "attn_moe":
+            h = h + moe_apply(p["moe"], cfg, hn)
+        elif cfg.mlp != "none":
+            h = h + mlp_apply(p["mlp"], hn, cfg.mlp, rsc)
+        return h, c
+    if kind == "cross":
+        hn = apply_norm(p["ln1"], h, cfg.norm_eps)
+        a, c = cross_attention(p["attn"], cfg, hn, cross_states,
+                               cache=cache, mode=mode)
+        h = h + a
+        hn = apply_norm(p["ln2"], h, cfg.norm_eps)
+        h = h + mlp_apply(p["mlp"], hn, cfg.mlp, rsc) * \
+            jnp.tanh(p["ffn_gate"]).astype(h.dtype)
+        return h, c
+    if kind == "rglru":
+        hn = apply_norm(p["ln1"], h, cfg.norm_eps)
+        r, c = rglru_block(p["rec"], cfg, hn, cache=cache, mode=mode)
+        h = h + r
+        hn = apply_norm(p["ln2"], h, cfg.norm_eps)
+        h = h + mlp_apply(p["mlp"], hn, cfg.mlp, rsc)
+        return h, c
+    if kind == "mlstm":
+        r, c = mlstm_block(p["cell"], cfg, h, cache=cache, mode=mode)
+        return h + r, c
+    if kind == "slstm":
+        r, c = slstm_block(p["cell"], cfg, h, cache=cache, mode=mode)
+        return h + r, c
+    raise ValueError(kind)
+
+
+def forward(
+    params, cfg: LMConfig, *,
+    tokens: jax.Array | None = None,      # (b, t) int32
+    embeds: jax.Array | None = None,      # (b, t, d) — modality stubs
+    cross_states: jax.Array | None = None,
+    cache: dict | None = None,
+    mode: str = "train",
+    rsc: dict | None = None,
+    last_only: bool = False,
+):
+    """Returns (logits, new_cache)."""
+    if embeds is not None:
+        h = embeds.astype(pdtype(cfg))
+    else:
+        h = jnp.take(params["embed"], tokens, axis=0)
+    h = shard(h, "batch", "seq", "embed")
+    b, t, d = h.shape
+
+    cache_len = cache["len"] if cache is not None else None
+    if mode == "decode":
+        positions = cache_len[None].astype(jnp.int32)
+    else:
+        positions = jnp.arange(t, dtype=jnp.int32)
+
+    if mode == "train":
+        new_cache = None
+    else:
+        new_len = (cache_len + t) if cache_len is not None \
+            else jnp.asarray(t, jnp.int32)
+        new_cache = {"prefix": [], "blocks": (), "suffix": [],
+                     "len": new_len}
+
+    def run_layer(p, kind, h, c_in):
+        return layer_apply(p, cfg, kind, h, positions,
+                           cache=c_in, cache_len=cache_len,
+                           cross_states=cross_states, mode=mode, rsc=rsc)
+
+    # prefix
+    for i, kind in enumerate(cfg.prefix):
+        c_in = cache["prefix"][i] if cache is not None else None
+        h, c = run_layer(params["prefix"][i], kind, h, c_in)
+        if new_cache is not None:
+            new_cache["prefix"].append(c)
+
+    # scanned super-blocks
+    if cfg.repeats:
+        def sb_body(hh, xs):
+            blk_p, blk_c = xs
+            cs = []
+            for i, kind in enumerate(cfg.pattern):
+                c_in = blk_c[i] if blk_c is not None else None
+                hh, c = run_layer(blk_p[i], kind, hh, c_in)
+                cs.append(c)
+            if mode == "train":
+                return hh, None
+            return hh, tuple(cs)
+
+        if cfg.remat and mode == "train":
+            sb_body = jax.checkpoint(sb_body, prevent_cse=False)
+
+        blk_cache_xs = cache["blocks"] if cache is not None else None
+        if blk_cache_xs is None:
+            h, ys = jax.lax.scan(lambda hh, bp: sb_body(hh, (bp, None)),
+                                 h, params["blocks"], unroll=scan_unroll())
+        else:
+            h, ys = jax.lax.scan(sb_body, h,
+                                 (params["blocks"], blk_cache_xs),
+                                 unroll=scan_unroll())
+        if new_cache is not None:
+            new_cache["blocks"] = ys
+
+    # suffix
+    for i, kind in enumerate(cfg.suffix):
+        c_in = cache["suffix"][i] if cache is not None else None
+        h, c = run_layer(params["suffix"][i], kind, h, c_in)
+        if new_cache is not None:
+            new_cache["suffix"].append(c)
+
+    h = apply_norm(params["final_norm"], h, cfg.norm_eps)
+    if last_only:
+        h = h[:, -1:]
+    if cfg.tie_embeddings:
+        logits = h.astype(jnp.float32) @ \
+            params["embed"].astype(jnp.float32).T
+    else:
+        logits = (h @ params["unembed"]["w"]).astype(jnp.float32)
+    logits = shard(logits, "batch", "seq", "vocab")
+    return logits, new_cache

@@ -1,0 +1,33 @@
+"""Cost-measurement mode for the roofline driver.
+
+XLA's HLO cost analysis counts a while-loop body ONCE regardless of trip
+count, so a scanned model under-reports FLOPs/collective-bytes by ~n_layers.
+When COST_EXACT is on, model code unrolls its internal scans (layer scan,
+flash kv-chunk scan, mLSTM chunk scan) so every executed op appears in the
+HLO exactly once per execution. The roofline driver combines this with
+two-point extrapolation over n_repeats (benchmarks/roofline.py).
+"""
+from __future__ import annotations
+
+import contextlib
+
+_STATE = {"cost_exact": False}
+
+
+def cost_exact() -> bool:
+    return _STATE["cost_exact"]
+
+
+@contextlib.contextmanager
+def cost_exact_mode(on: bool = True):
+    prev = _STATE["cost_exact"]
+    _STATE["cost_exact"] = on
+    try:
+        yield
+    finally:
+        _STATE["cost_exact"] = prev
+
+
+def scan_unroll() -> bool | int:
+    """unroll= argument for model-internal scans."""
+    return True if _STATE["cost_exact"] else 1

@@ -1,0 +1,31 @@
+"""int8 KV-cache quantization — the decode-cell roofline lever.
+
+The optimized decode cells are memory-bound on reading the KV cache
+(EXPERIMENTS.md §Roofline); per-token int8 storage halves that term vs bf16
+(and quarters HBM footprint vs f32 states). Symmetric per-(token, head)
+scales; dequantize on read inside the attention einsum's f32 accumulation,
+so the quality impact is bounded by one rounding step per cache write.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x: (b, s, n, hd) -> (int8 codes, f32 scales (b, s, n))."""
+    m = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(m / 127.0, 1e-8)
+    codes = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                     -127, 127).astype(jnp.int8)
+    return codes, scale
+
+
+def dequantize_kv(codes: jax.Array, scale: jax.Array,
+                  dtype=jnp.bfloat16) -> jax.Array:
+    return (codes.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def cache_bytes_ratio(dtype=jnp.bfloat16, hd: int = 128) -> float:
+    """int8+scale wire/storage bytes vs the unquantized dtype."""
+    return (hd * 1 + 4) / (hd * jnp.dtype(dtype).itemsize)

@@ -1,0 +1,114 @@
+"""Primitive layers for the LM stack (pure-pytree, bf16 params, f32 norms)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm.config import LMConfig
+from repro.models.lm.sharding import shard
+
+
+def pdtype(cfg: LMConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def he(key, shape, dtype, fan_in=None):
+    fan_in = fan_in if fan_in else shape[0]
+    return (jax.random.normal(key, shape, jnp.float32)
+            * np.sqrt(1.0 / fan_in)).astype(dtype)
+
+
+def linear_init(key, d_in, d_out, dtype, bias=False):
+    p = {"w": he(key, (d_in, d_out), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def norm_init(d, kind="rmsnorm"):
+    p = {"g": jnp.ones((d,), jnp.float32)}
+    if kind == "layernorm":
+        p["b"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(p, x, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    if "b" in p:  # layernorm
+        mu = jnp.mean(x32, -1, keepdims=True)
+        var = jnp.var(x32, -1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + eps) * p["g"] + p["b"]
+    else:  # rmsnorm
+        ms = jnp.mean(x32 * x32, -1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(ms + eps) * p["g"]
+    return y.astype(x.dtype)
+
+
+# ------------------------------- RoPE --------------------------------------
+
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., t, h, hd); positions: (..., t)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,t,1,hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x32 = x.astype(jnp.float32)
+    x1, x2 = x32[..., : hd // 2], x32[..., hd // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------- MLPs --------------------------------------
+
+def mlp_init(key, cfg: LMConfig, d_ff: int | None = None) -> dict:
+    d_ff = d_ff if d_ff else cfg.d_ff
+    dt = pdtype(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {"gate": linear_init(ks[0], d, d_ff, dt),
+                "up": linear_init(ks[1], d, d_ff, dt),
+                "down": linear_init(ks[2], d_ff, d, dt)}
+    return {"up": linear_init(ks[0], d, d_ff, dt),
+            "down": linear_init(ks[1], d_ff, d, dt)}
+
+
+def mlp_apply(p, x, kind: str, rsc=None):
+    """Optionally routes matmuls through rsc_matmul (dense RSC backward)."""
+    mm = _mm(rsc)
+    if kind == "swiglu":
+        h = jax.nn.silu(mm(x, p["gate"])) * mm(x, p["up"])
+    elif kind == "geglu":
+        h = jax.nn.gelu(mm(x, p["gate"])) * mm(x, p["up"])
+    else:
+        h = jax.nn.gelu(mm(x, p["up"]))
+    h = shard(h, "batch", "seq", "ffn")
+    return mm(h, p["down"])
+
+
+def _mm(rsc):
+    if rsc is None:
+        def mm(x, p):
+            return linear(p, x)
+        return mm
+    from repro.core.rsc_matmul import rsc_matmul
+
+    def mm(x, p):
+        y = rsc_matmul(x, p["w"], rsc["keep_frac"], rsc.get("bk", 128),
+                       rsc.get("backend", "jnp"))
+        if "b" in p:
+            y = y + p["b"]
+        return y
+    return mm

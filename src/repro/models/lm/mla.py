@@ -1,0 +1,128 @@
+"""Multi-head Latent Attention (DeepSeek-V2), with compressed KV cache.
+
+Train/prefill use the expanded form (k/v up-projected from the latent,
+flash-chunked MHA). Decode uses the ABSORBED form: scores are taken directly
+against the (b, S, kv_lora) latent cache by folding W_uk into the query and
+W_uv into the output — per-token cache cost is kv_lora + qk_rope = 576
+elements regardless of head count, and decode FLOPs scale with kv_lora, not
+n_heads·(nope+v). (Beyond-paper perf note recorded in EXPERIMENTS.md §Perf.)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm.config import LMConfig
+from repro.models.lm.attention import flash_attention
+from repro.models.lm.layers import (apply_norm, apply_rope, linear,
+                                    linear_init, norm_init, pdtype)
+from repro.models.lm.sharding import shard
+
+NEG_INF = -1e30
+
+
+def mla_init(key, cfg: LMConfig) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 8)
+    p = {
+        "w_dkv": linear_init(ks[0], d, m.kv_lora, dt),
+        "w_kr": linear_init(ks[1], d, m.qk_rope, dt),
+        "kv_norm": norm_init(m.kv_lora),
+        "w_uk": linear_init(ks[2], m.kv_lora, h * m.qk_nope, dt),
+        "w_uv": linear_init(ks[3], m.kv_lora, h * m.v_head, dt),
+        "wo": linear_init(ks[4], h * m.v_head, d, dt),
+    }
+    if m.q_lora:
+        p["w_dq"] = linear_init(ks[5], d, m.q_lora, dt)
+        p["q_norm"] = norm_init(m.q_lora)
+        p["w_uq"] = linear_init(ks[6], m.q_lora, h * (m.qk_nope + m.qk_rope),
+                                dt)
+    else:
+        p["w_q"] = linear_init(ks[5], d, h * (m.qk_nope + m.qk_rope), dt)
+    return p
+
+
+def _queries(p, cfg: LMConfig, x, positions):
+    m = cfg.mla
+    b, t, _ = x.shape
+    h = cfg.n_heads
+    if m.q_lora:
+        cq = apply_norm(p["q_norm"], linear(p["w_dq"], x), cfg.norm_eps)
+        q = linear(p["w_uq"], cq)
+    else:
+        q = linear(p["w_q"], x)
+    q = q.reshape(b, t, h, m.qk_nope + m.qk_rope)
+    q_nope, q_rope = q[..., : m.qk_nope], q[..., m.qk_nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return (shard(q_nope, "batch", "seq", "heads", None),
+            shard(q_rope, "batch", "seq", "heads", None))
+
+
+def _latents(p, cfg: LMConfig, x, positions):
+    m = cfg.mla
+    ckv = apply_norm(p["kv_norm"], linear(p["w_dkv"], x), cfg.norm_eps)
+    krope = linear(p["w_kr"], x)[:, :, None, :]           # (b,t,1,rope)
+    krope = apply_rope(krope, positions, cfg.rope_theta)[:, :, 0]
+    return ckv, krope
+
+
+def mla_attention(
+    p, cfg: LMConfig, x, positions, *,
+    cache: dict | None = None,
+    cache_len: jax.Array | None = None,
+    mode: str = "train",
+):
+    m = cfg.mla
+    b, t, _ = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope = _queries(p, cfg, x, positions)
+
+    if mode in ("train", "prefill"):
+        ckv, krope = _latents(p, cfg, x, positions)
+        k_nope = linear(p["w_uk"], ckv).reshape(b, t, h, m.qk_nope)
+        v = linear(p["w_uv"], ckv).reshape(b, t, h, m.v_head)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(krope[:, :, None, :],
+                                      (b, t, h, m.qk_rope))], -1)
+        q = jnp.concatenate([q_nope, q_rope], -1)
+        # MHA (n_kv == n_heads); pad v to qk dim not needed — flash takes v.
+        out = flash_attention(q, k, v, q_positions=positions,
+                              kv_positions=positions, chunk=cfg.attn_chunk)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"ckv": shard(ckv, "batch", "kv_seq", None),
+                         "krope": shard(krope, "batch", "kv_seq", None)}
+        out = out.reshape(b, t, h * m.v_head)
+    else:  # decode — absorbed form against the latent cache
+        assert cache is not None and cache_len is not None
+        ckv_t, krope_t = _latents(p, cfg, x, positions)
+        ckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv_t,
+                                           (0, cache_len, 0))
+        krope = jax.lax.dynamic_update_slice(cache["krope"], krope_t,
+                                             (0, cache_len, 0))
+        new_cache = {"ckv": ckv, "krope": krope}
+        s_max = ckv.shape[1]
+        w_uk = p["w_uk"]["w"].reshape(m.kv_lora, h, m.qk_nope)
+        # fold W_uk into q: (b,1,h,nope)·(lora,h,nope) -> (b,1,h,lora)
+        q_eff = jnp.einsum("bthn,lhn->bthl", q_nope.astype(jnp.float32),
+                           w_uk.astype(jnp.float32))
+        scores = jnp.einsum("bthl,bsl->bths", q_eff,
+                            ckv.astype(jnp.float32))
+        scores += jnp.einsum("bthr,bsr->bths", q_rope.astype(jnp.float32),
+                             krope.astype(jnp.float32))
+        scores *= (m.qk_nope + m.qk_rope) ** -0.5
+        kv_pos = jnp.arange(s_max)
+        scores = jnp.where((kv_pos <= cache_len)[None, None, None, :],
+                           scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out_lat = jnp.einsum("bths,bsl->bthl", probs,
+                             ckv.astype(jnp.float32))   # (b,1,h,lora)
+        w_uv = p["w_uv"]["w"].reshape(m.kv_lora, h, m.v_head)
+        out = jnp.einsum("bthl,lhv->bthv", out_lat,
+                         w_uv.astype(jnp.float32)).astype(x.dtype)
+        out = out.reshape(b, t, h * m.v_head)
+
+    out = linear(p["wo"], out)
+    return shard(out, "batch", "seq", "embed"), new_cache

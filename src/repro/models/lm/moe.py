@@ -1,0 +1,114 @@
+"""DeepSeek-V2 MoE: shared experts + top-k routed experts (EP-sharded).
+
+TPU-idiomatic dispatch, DATA-PARALLEL-LOCAL by construction
+(EXPERIMENTS.md §Perf H4): routing, positions and the capacity scatter are
+computed PER BATCH ROW, so with batch sharded over 'data' every scatter
+stays inside its shard — GSPMD emits only the inherent expert all-to-all
+(buffers are sharded batch×experts), never cross-shard scatters of
+global-capacity buffers. Positions within (row, expert) come from a
+double-argsort (O(t·k log), O(t·k) memory — no (tokens, E, cap) one-hot).
+
+Numerics: router in f32, expert compute in the model dtype, combine cast
+back to the model dtype so no f32 leaks into the residual stream.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm.config import LMConfig
+from repro.models.lm.layers import linear, linear_init, mlp_init, pdtype
+from repro.models.lm.sharding import shard
+
+
+def moe_init(key, cfg: LMConfig) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 4 + m.n_shared)
+
+    def stack_expert(k):
+        kk = jax.random.split(k, m.n_routed)
+        ws = [mlp_init(kkk, cfg, m.d_expert) for kkk in kk]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *ws)
+
+    return {
+        "router": linear_init(ks[0], d, m.n_routed, jnp.float32),
+        "experts": stack_expert(ks[1]),
+        "shared": [mlp_init(ks[2 + i], cfg, m.d_expert)
+                   for i in range(m.n_shared)],
+    }
+
+
+def _expert_ffn(experts, xb, kind: str):
+    """xb: (b, E, cap, d) -> same through per-expert gated FFN."""
+    if kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if kind == "swiglu" else jax.nn.gelu
+        g = jnp.einsum("becd,edf->becf", xb, experts["gate"]["w"])
+        u = jnp.einsum("becd,edf->becf", xb, experts["up"]["w"])
+        h = act(g) * u
+    else:
+        h = jax.nn.gelu(jnp.einsum("becd,edf->becf", xb, experts["up"]["w"]))
+    h = shard(h, "batch", "experts", None, None)
+    return jnp.einsum("becf,efd->becd", h, experts["down"]["w"])
+
+
+def moe_apply(p, cfg: LMConfig, x: jax.Array) -> jax.Array:
+    """x: (b, t, d) -> (b, t, d)."""
+    m = cfg.moe
+    b, t, d = x.shape
+    dt = x.dtype
+
+    # --- routing (f32) ---
+    logits = linear(p["router"], x.astype(jnp.float32))       # (b, t, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_e = jax.lax.top_k(probs, m.top_k)            # (b, t, k)
+
+    fe = gate_e.reshape(b, t * m.top_k)                       # (b, t·k)
+    fw = gate_w.reshape(b, t * m.top_k)
+    tok = jnp.repeat(jnp.arange(t), m.top_k)[None, :]         # (1, t·k)
+    tok = jnp.broadcast_to(tok, (b, t * m.top_k))
+
+    # --- per-row positions within expert (double argsort) ---
+    order = jnp.argsort(fe, axis=1, stable=True)
+    rank = jnp.argsort(order, axis=1)
+    onehot = jax.nn.one_hot(fe, m.n_routed, dtype=jnp.int32)  # (b, t·k, E)
+    counts = onehot.sum(axis=1)                               # (b, E)
+    starts = jnp.cumsum(counts, axis=1) - counts
+    pos = rank - jnp.take_along_axis(starts, fe, axis=1)
+
+    cap = max(1, -(-int(m.capacity_factor * t * m.top_k) // m.n_routed))
+    cap = min(cap, t)
+    overflow = pos >= cap
+    e_slot = jnp.where(overflow, m.n_routed, fe)
+    p_slot = jnp.where(overflow, 0, pos)
+
+    # --- dispatch: per-row scatter into (b, E+1, cap, d) ---
+    # vmap over the batch row makes it a BATCHED scatter, which GSPMD
+    # partitions along 'data' instead of replicating (§Perf H4b).
+    xg = jnp.take_along_axis(x, tok[..., None], axis=1)       # (b, t·k, d)
+
+    def row_scatter(e, pslot, xgr):
+        buf = jnp.zeros((m.n_routed + 1, cap, d), dt)
+        return buf.at[e, pslot].add(xgr)
+
+    xb = jax.vmap(row_scatter)(e_slot, p_slot, xg)
+    xb = shard(xb, "batch", "experts", None, None)
+
+    yb = _expert_ffn(p["experts"], xb[:, : m.n_routed], cfg.mlp)
+    yb = jnp.concatenate(
+        [yb, jnp.zeros((b, 1, cap, d), yb.dtype)], axis=1)
+
+    # --- combine: batched gather back, weight, sum over top_k ---
+    y_tok = jax.vmap(lambda ybr, e, pslot: ybr[e, pslot])(
+        yb, e_slot, p_slot)                                   # (b, t·k, d)
+    w_eff = jnp.where(overflow, 0.0, fw).astype(dt)[..., None]
+    y_tok = (y_tok * w_eff).reshape(b, t, m.top_k, d)
+    y = y_tok.sum(axis=2).astype(dt)
+    y = shard(y, "batch", "seq", "embed")
+
+    # --- shared experts (always-on) ---
+    from repro.models.lm.layers import mlp_apply
+    for sp in p["shared"]:
+        y = y + mlp_apply(sp, x, cfg.mlp)
+
+    return y.astype(dt)

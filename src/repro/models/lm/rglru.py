@@ -1,0 +1,111 @@
+"""Griffin/RecurrentGemma recurrent block: conv1d + RG-LRU gated recurrence.
+
+RG-LRU:  r_t = σ(W_a x_t + b_a)          (recurrence gate)
+         i_t = σ(W_x x_t + b_x)          (input gate)
+         a_t = exp(−c · softplus(Λ) · r_t),  c = 8
+         h_t = a_t ⊙ h_{t-1} + √(1−a_t²) ⊙ (i_t ⊙ x_t)
+
+Train/prefill run the linear recurrence with jax.lax.associative_scan
+(log-depth); decode is the one-step form carrying (h, conv tail) state.
+Block layout (Griffin): gate branch (GeLU) × recurrent branch (conv → LRU),
+merged then down-projected.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm.config import LMConfig
+from repro.models.lm.layers import linear, linear_init, pdtype
+from repro.models.lm.sharding import shard
+
+_C = 8.0
+
+
+def rglru_init(key, cfg: LMConfig) -> dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 6)
+    # Λ init so that a ∈ (0.9, 0.999) at r=1 (Griffin appendix).
+    u = jax.random.uniform(ks[0], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^-1(-log u / c)
+    return {
+        "in_gate": linear_init(ks[1], d, w, dt),        # gate branch
+        "in_rec": linear_init(ks[2], d, w, dt),         # recurrent branch
+        "conv_w": (jax.random.normal(ks[3], (cfg.conv_width, w), jnp.float32)
+                   * 0.1).astype(dt),
+        "conv_b": jnp.zeros((w,), dt),
+        "wa": linear_init(ks[4], w, w, dt),
+        "wx": linear_init(ks[5], w, w, dt),
+        "lambda": lam,
+        "out": linear_init(jax.random.fold_in(key, 7), w, d, dt),
+    }
+
+
+def _conv1d(p, x, conv_state=None):
+    """Causal depthwise conv, width cfg.conv_width.
+
+    conv_state: (b, width-1, w) tail of previous tokens (decode)."""
+    width = p["conv_w"].shape[0]
+    if conv_state is None:
+        pads = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+        xp = jnp.concatenate([pads, x], axis=1)
+    else:
+        xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i: i + x.shape[1]] * p["conv_w"][i]
+              for i in range(width))
+    new_state = xp[:, -(width - 1):] if width > 1 else None
+    return out + p["conv_b"], new_state
+
+
+def _rg_lru_scan(p, x, h0=None):
+    """x: (b, t, w) -> (y, h_last) via associative scan over t."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(linear(p["wa"], x).astype(jnp.float32))
+    i = jax.nn.sigmoid(linear(p["wx"], x).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lambda"]) * r          # (b,t,w)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+    if h0 is not None:
+        gated = gated.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, y = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return y.astype(x.dtype), y[:, -1]
+
+
+def _rg_lru_step(p, x, h_prev):
+    """x: (b, 1, w); h_prev: (b, w)."""
+    xf = x.astype(jnp.float32)[:, 0]
+    r = jax.nn.sigmoid(linear(p["wa"], x).astype(jnp.float32))[:, 0]
+    i = jax.nn.sigmoid(linear(p["wx"], x).astype(jnp.float32))[:, 0]
+    a = jnp.exp(-_C * jax.nn.softplus(p["lambda"]) * r)
+    h = a * h_prev.astype(jnp.float32) + \
+        jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+    return h[:, None].astype(x.dtype), h
+
+
+def rglru_block(p, cfg: LMConfig, x, *, cache=None, mode="train"):
+    """Temporal-mixing block. cache = {"h": (b,w), "conv": (b,cw-1,w)}."""
+    b, t, _ = x.shape
+    gate = jax.nn.gelu(linear(p["in_gate"], x))
+    rec = linear(p["in_rec"], x)
+    rec = shard(rec, "batch", "seq", "ffn")
+
+    if mode == "decode":
+        rec_conv, conv_state = _conv1d(p, rec, cache["conv"])
+        y, h_last = _rg_lru_step(p, rec_conv, cache["h"])
+        new_cache = {"h": h_last.astype(x.dtype), "conv": conv_state}
+    else:
+        rec_conv, conv_tail = _conv1d(p, rec)
+        y, h_last = _rg_lru_scan(p, rec_conv)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"h": h_last.astype(x.dtype), "conv": conv_tail}
+    out = linear(p["out"], gate * y)
+    return shard(out, "batch", "seq", "embed"), new_cache

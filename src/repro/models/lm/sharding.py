@@ -1,0 +1,81 @@
+"""Activation-sharding context for the LM stack.
+
+Model code annotates activations with LOGICAL axes
+(``shard(x, "batch", None, "heads", None)``); a mesh context installed by the
+launcher maps logical → physical mesh axes. Without a context (unit tests,
+single-device smoke) everything is a no-op, so model code never branches on
+distribution.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+# Logical-axis dictionaries (DESIGN.md §6).
+TRAIN_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "heads": "model",
+    # kv heads REPLICATED across TP: GQA kv counts (1–24) rarely divide 16;
+    # forcing them onto 'model' caused uneven-shard full rematerialization
+    # (EXPERIMENTS.md §Perf H2). K/V activations are small (nkv·hd ≪ d_ff).
+    "kv_heads": None,
+    "ffn": "model",
+    "vocab": "model",
+    "experts": "model",
+    "kv_seq": None,
+}
+
+DECODE_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": None,       # GQA kv counts rarely divide TP=16
+    "ffn": "model",
+    "vocab": "model",
+    "experts": "model",
+    "kv_seq": "model",      # sequence-parallel KV cache
+}
+
+
+def _axes_in_mesh(mesh: Mesh, axes):
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        return axes if axes in mesh.axis_names else None
+    kept = tuple(a for a in axes if a in mesh.axis_names)
+    return kept if kept else None
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh, rules: dict):
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def current_mesh() -> Mesh | None:
+    ctx = getattr(_STATE, "ctx", None)
+    return ctx[0] if ctx else None
+
+
+def shard(x: jax.Array, *logical_axes) -> jax.Array:
+    """with_sharding_constraint under the active mesh context (no-op else)."""
+    ctx = getattr(_STATE, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    assert len(logical_axes) == x.ndim, (logical_axes, x.shape)
+    spec = P(*(_axes_in_mesh(mesh, rules.get(a)) if a else None
+               for a in logical_axes))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,283 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM is implemented in CHUNKWISE-PARALLEL form (linear in T, dense-matmul
+within chunks — the TPU-native adaptation; the quadratic-parallel GPU form
+would be O(T²) and the pure recurrence is MXU-hostile). A step-recurrent
+reference (`mlstm_recurrent`) is kept as the oracle for tests and decode.
+
+Stabilized recurrence (xLSTM paper eq. 19-27):
+    m_t = max(f̃_t + m_{t-1}, ĩ_t)
+    C_t = e^{f̃_t+m_{t-1}-m_t} C_{t-1} + e^{ĩ_t-m_t} v_t k_tᵀ
+    n_t = e^{f̃_t+m_{t-1}-m_t} n_{t-1} + e^{ĩ_t-m_t} k_t
+    h_t = (C_t q_t) / max(|n_tᵀ q_t|, e^{-m_t})        (q scaled by dk^-1/2)
+
+sLSTM keeps its inherently-sequential scan (per-head recurrent matrices).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm.config import LMConfig
+from repro.models.lm.layers import (apply_norm, linear, linear_init,
+                                    norm_init, pdtype)
+from repro.models.lm.sharding import shard
+
+NEG = -1e30
+
+
+# ----------------------------- mLSTM cell ----------------------------------
+
+def mlstm_chunkwise(q, k, v, igate, fgate, *, chunk: int = 128,
+                    carry=None):
+    """q,k,v: (b, t, nh, dk/dv); igate,fgate: (b, t, nh) log-space.
+
+    Returns (h: (b,t,nh,dv), carry=(C, n, m)) — linear in t.
+    """
+    b, t, nh, dk = q.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, t)
+    assert t % chunk == 0
+    nc = t // chunk
+    q = (q.astype(jnp.float32) * dk ** -0.5)
+    k, v = k.astype(jnp.float32), v.astype(jnp.float32)
+    ig = igate.astype(jnp.float32)
+    fg = jax.nn.log_sigmoid(fgate.astype(jnp.float32))
+
+    def resh(x):
+        return x.reshape(b, nc, chunk, *x.shape[2:]).swapaxes(0, 1)
+
+    qs, ks, vs, igs, fgs = map(resh, (q, k, v, ig, fg))
+
+    if carry is None:
+        carry = (jnp.zeros((b, nh, dv, dk), jnp.float32),
+                 jnp.zeros((b, nh, dk), jnp.float32),
+                 jnp.full((b, nh), NEG, jnp.float32))
+
+    def chunk_step(car, xs):
+        C, n, m = car
+        qc, kc, vc, ic, fc = xs            # (b, chunk, nh, ·)
+        bcum = jnp.cumsum(fc, axis=1)      # (b, chunk, nh)
+        B = bcum[:, -1]                    # (b, nh)
+
+        # stabilizer per position: max(inter, intra)
+        # intra pair log-weight source: g_s = ĩ_s − b_s
+        g = ic - bcum                      # (b, chunk, nh)
+        g_run = jax.lax.cummax(g, axis=1)  # max_{s≤t} g_s
+        m_t = jnp.maximum(bcum + m[:, None], bcum + g_run)  # (b,chunk,nh)
+
+        lam = jnp.exp(bcum + m[:, None] - m_t)              # inter scale
+        # intra weights w_ts = b_t − b_s + ĩ_s − m_t  (s ≤ t)
+        w = (bcum[:, :, None] - bcum[:, None, :] + ic[:, None, :]
+             - m_t[:, :, None])                             # (b, tq, ts, nh)
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        w = jnp.where(causal[None, :, :, None], w, NEG)
+        dmat = jnp.exp(w)
+
+        scores = jnp.einsum("bthd,bshd->btsh", qc, kc)      # (b,tq,ts,nh)
+        intra = jnp.einsum("btsh,bshv->bthv", scores * dmat, vc)
+        inter = jnp.einsum("bhvd,bthd->bthv", C, qc) * lam[..., None]
+
+        n_t = (lam[..., None] * n[:, None]
+               + jnp.einsum("btsh,bshd->bthd", dmat, kc))
+        denom = jnp.maximum(
+            jnp.abs(jnp.einsum("bthd,bthd->bth", n_t, qc)),
+            jnp.exp(-m_t))
+        h = (intra + inter) / denom[..., None]
+
+        # carry to next chunk
+        m_new = jnp.maximum(B + m, B + g_run[:, -1])
+        scale_old = jnp.exp(B + m - m_new)                  # (b, nh)
+        wk = jnp.exp(B[:, None] - bcum + ic - m_new[:, None])  # (b,chunk,nh)
+        C_new = (scale_old[:, :, None, None] * C
+                 + jnp.einsum("bshv,bsh,bshd->bhvd", vc, wk, kc))
+        n_new = (scale_old[:, :, None] * n
+                 + jnp.einsum("bsh,bshd->bhd", wk, kc))
+        return (C_new, n_new, m_new), h
+
+    # NOTE: deliberately not unrolled in cost-exact mode (compile blow-up);
+    # the roofline driver adds the chunk-scan FLOPs analytically
+    # (benchmarks/roofline.py::_mlstm_correction).
+    carry, hs = jax.lax.scan(chunk_step, carry, (qs, ks, vs, igs, fgs))
+    h = hs.swapaxes(0, 1).reshape(b, t, nh, dv)
+    return h, carry
+
+
+def mlstm_recurrent(q, k, v, igate, fgate, carry=None):
+    """Step-by-step oracle (and decode path). Same signature/semantics."""
+    b, t, nh, dk = q.shape
+    dv = v.shape[-1]
+    if carry is None:
+        carry = (jnp.zeros((b, nh, dv, dk), jnp.float32),
+                 jnp.zeros((b, nh, dk), jnp.float32),
+                 jnp.full((b, nh), NEG, jnp.float32))
+    qf = q.astype(jnp.float32) * dk ** -0.5
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    ig = igate.astype(jnp.float32)
+    fg = jax.nn.log_sigmoid(fgate.astype(jnp.float32))
+
+    def step(car, xs):
+        C, n, m = car
+        qt, kt, vt, it, ft = xs
+        m_new = jnp.maximum(ft + m, it)
+        fs = jnp.exp(ft + m - m_new)[..., None]
+        is_ = jnp.exp(it - m_new)[..., None]
+        C = fs[..., None] * C + is_[..., None] * \
+            jnp.einsum("bhv,bhd->bhvd", vt, kt)
+        n = fs * n + is_ * kt
+        num = jnp.einsum("bhvd,bhd->bhv", C, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, qt)),
+                          jnp.exp(-m_new))
+        return (C, n, m_new), num / den[..., None]
+
+    xs = (qf.swapaxes(0, 1), kf.swapaxes(0, 1), vf.swapaxes(0, 1),
+          ig.swapaxes(0, 1), fg.swapaxes(0, 1))
+    carry, hs = jax.lax.scan(step, carry, xs)
+    return hs.swapaxes(0, 1).astype(jnp.float32), carry
+
+
+# ----------------------------- mLSTM block ---------------------------------
+
+def mlstm_init(key, cfg: LMConfig) -> dict:
+    d = cfg.d_model
+    ud = 2 * d
+    nh = cfg.mlstm_heads
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": norm_init(d, cfg.norm),
+        "up": linear_init(ks[0], d, 2 * ud, dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, ud), jnp.float32)
+                   * 0.1).astype(dt),
+        "conv_b": jnp.zeros((ud,), dt),
+        "wq": linear_init(ks[2], ud, ud, dt),
+        "wk": linear_init(ks[3], ud, ud, dt),
+        "wv": linear_init(ks[4], ud, ud, dt),
+        "wgate": linear_init(ks[5], ud, 2 * nh, dt),
+        "head_norm": norm_init(ud // nh),
+        "down": linear_init(ks[6], ud, d, dt),
+    }
+
+
+def _causal_conv(w, bbias, x, state=None):
+    width = w.shape[0]
+    if state is None:
+        pads = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+        xp = jnp.concatenate([pads, x], 1)
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], 1)
+    out = sum(xp[:, i: i + x.shape[1]] * w[i] for i in range(width))
+    return out + bbias, xp[:, -(width - 1):]
+
+
+def mlstm_block(p, cfg: LMConfig, x, *, cache=None, mode="train"):
+    """cache = {"C","n","m","conv"}; returns (y, new_cache)."""
+    b, t, d = x.shape
+    nh = cfg.mlstm_heads
+    xn = apply_norm(p["norm"], x, cfg.norm_eps)
+    up = linear(p["up"], xn)
+    ud = up.shape[-1] // 2
+    xm, z = up[..., :ud], up[..., ud:]
+    xm = shard(xm, "batch", "seq", "ffn")
+
+    conv_state = cache.get("conv") if cache else None
+    xc, conv_tail = _causal_conv(p["conv_w"], p["conv_b"], xm, conv_state)
+    xc = jax.nn.silu(xc)
+
+    q = linear(p["wq"], xc).reshape(b, t, nh, ud // nh)
+    k = linear(p["wk"], xc).reshape(b, t, nh, ud // nh)
+    v = linear(p["wv"], xm).reshape(b, t, nh, ud // nh)
+    gates = linear(p["wgate"], xc).astype(jnp.float32)
+    ig, fg = gates[..., :nh], gates[..., nh:]
+
+    carry = None
+    if cache is not None and mode == "decode":
+        carry = (cache["C"], cache["n"], cache["m"])
+    if mode == "decode":
+        h, carry = mlstm_recurrent(q, k, v, ig, fg, carry)
+    else:
+        h, carry = mlstm_chunkwise(q, k, v, ig, fg, chunk=128, carry=carry)
+    h = apply_norm(p["head_norm"], h.astype(x.dtype), cfg.norm_eps)
+    h = h.reshape(b, t, ud)
+
+    out = linear(p["down"], h * jax.nn.silu(z))
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"C": carry[0], "n": carry[1], "m": carry[2],
+                     "conv": conv_tail}
+    return shard(out, "batch", "seq", "embed"), new_cache
+
+
+# ----------------------------- sLSTM block ---------------------------------
+
+def slstm_init(key, cfg: LMConfig) -> dict:
+    d = cfg.d_model
+    nh = cfg.slstm_heads
+    dh = d // nh
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 10)
+    d_ff = int(d * 4 / 3 // 64 * 64) or 64
+    p = {"norm": norm_init(d, cfg.norm)}
+    for i, g in enumerate(("z", "i", "f", "o")):
+        p[f"w{g}"] = linear_init(ks[i], d, d, dt)
+        p[f"r{g}"] = (jax.random.normal(ks[4 + i], (nh, dh, dh), jnp.float32)
+                      / jnp.sqrt(dh)).astype(dt)
+    p["out_norm"] = norm_init(d, cfg.norm)
+    p["ffn_gate"] = linear_init(ks[8], d, d_ff, dt)
+    p["ffn_up"] = linear_init(jax.random.fold_in(key, 11), d, d_ff, dt)
+    p["ffn_down"] = linear_init(ks[9], d_ff, d, dt)
+    return p
+
+
+def slstm_cell(p, cfg: LMConfig, x, carry=None):
+    """x: (b, t, d); sequential scan. carry = (c, n, h, m) each (b, nh, dh)."""
+    b, t, d = x.shape
+    nh = cfg.slstm_heads
+    dh = d // nh
+    if carry is None:
+        zero = jnp.zeros((b, nh, dh), jnp.float32)
+        carry = (zero, zero, zero, jnp.full((b, nh, dh), NEG, jnp.float32))
+
+    wz = linear(p["wz"], x).reshape(b, t, nh, dh).astype(jnp.float32)
+    wi = linear(p["wi"], x).reshape(b, t, nh, dh).astype(jnp.float32)
+    wf = linear(p["wf"], x).reshape(b, t, nh, dh).astype(jnp.float32)
+    wo = linear(p["wo"], x).reshape(b, t, nh, dh).astype(jnp.float32)
+    rz = p["rz"].astype(jnp.float32)
+    ri = p["ri"].astype(jnp.float32)
+    rf = p["rf"].astype(jnp.float32)
+    ro = p["ro"].astype(jnp.float32)
+
+    def step(car, xs):
+        c, n, h, m = car
+        xz, xi, xf, xo = xs
+        zt = jnp.tanh(xz + jnp.einsum("bhd,hde->bhe", h, rz))
+        it = xi + jnp.einsum("bhd,hde->bhe", h, ri)           # log-space
+        ft = jax.nn.log_sigmoid(xf + jnp.einsum("bhd,hde->bhe", h, rf))
+        ot = jax.nn.sigmoid(xo + jnp.einsum("bhd,hde->bhe", h, ro))
+        m_new = jnp.maximum(ft + m, it)
+        fs, is_ = jnp.exp(ft + m - m_new), jnp.exp(it - m_new)
+        c = fs * c + is_ * zt
+        n = fs * n + is_
+        h = ot * c / jnp.maximum(n, 1e-6)
+        return (c, n, h, m_new), h
+
+    xs = (wz.swapaxes(0, 1), wi.swapaxes(0, 1), wf.swapaxes(0, 1),
+          wo.swapaxes(0, 1))
+    carry, hs = jax.lax.scan(step, carry, xs)
+    return hs.swapaxes(0, 1).reshape(b, t, d).astype(x.dtype), carry
+
+
+def slstm_block(p, cfg: LMConfig, x, *, cache=None, mode="train"):
+    xn = apply_norm(p["norm"], x, cfg.norm_eps)
+    carry = None
+    if cache is not None and mode == "decode":
+        carry = (cache["c"], cache["n"], cache["h"], cache["m"])
+    h, carry = slstm_cell(p, cfg, xn, carry)
+    h = apply_norm(p["out_norm"], h, cfg.norm_eps)
+    g = jax.nn.gelu(linear(p["ffn_gate"], h)) * linear(p["ffn_up"], h)
+    out = linear(p["ffn_down"], g)
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"c": carry[0], "n": carry[1], "h": carry[2],
+                     "m": carry[3]}
+    return shard(out, "batch", "seq", "embed"), new_cache

@@ -1,0 +1,14 @@
+"""Sparse substrate: host CSR, device block-COO, graph topology ops."""
+from repro.sparse.csr import CSR
+from repro.sparse.bcoo import BlockCOO, csr_to_bcoo, degree_sort_permutation
+from repro.sparse.topology import sym_normalize, mean_normalize, degrees
+
+__all__ = [
+    "CSR",
+    "BlockCOO",
+    "csr_to_bcoo",
+    "degree_sort_permutation",
+    "sym_normalize",
+    "mean_normalize",
+    "degrees",
+]

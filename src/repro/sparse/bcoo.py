@@ -1,0 +1,153 @@
+"""Block-COO: the TPU-native sparse format for RSC (DESIGN.md §2).
+
+A sparse matrix is stored as a list of dense (bm, bk) tiles:
+
+    blocks:  (S+1, bm, bk)  — value tiles; entry S is an all-zero SENTINEL
+    row_ids: (S,) int32     — tile row-block coordinate, sorted ascending
+    col_ids: (S,) int32     — tile column-block coordinate
+
+Sampling ("slicing" in the paper) NEVER moves tile data: a sampled operand is
+just a new index list into ``blocks`` (a ``SamplePlan``), with padding entries
+pointing at the sentinel tile. This turns the paper's expensive CSR re-slicing
+into an O(#tiles) int32 rewrite — the property that lets the caching mechanism
+(§3.3.1) amortize sampling to nothing on TPU.
+
+Host-side numpy mirrors of the index lists plus per-column-block metadata
+(tile counts = FLOPs units for Eq. 4b, aggregate column norms for Eq. 3
+scores) are kept for the planner, which runs on host every R steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse.csr import CSR
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["blocks", "row_ids", "col_ids"],
+    meta_fields=["bm", "bk", "n_rows", "n_cols", "n_row_blocks",
+                 "n_col_blocks", "s_total"],
+)
+@dataclasses.dataclass(frozen=True)
+class BlockCOO:
+    """Device block-COO sparse matrix (a JAX pytree).
+
+    ``blocks`` has ``s_total + 1`` tiles; index ``s_total`` is the zero
+    sentinel used by sampled plans for padding.
+    """
+
+    blocks: jax.Array     # (s_total + 1, bm, bk)
+    row_ids: jax.Array    # (s_total,) int32, sorted ascending
+    col_ids: jax.Array    # (s_total,) int32
+    bm: int
+    bk: int
+    n_rows: int           # padded logical row count (multiple of bm)
+    n_cols: int           # padded logical col count (multiple of bk)
+    n_row_blocks: int
+    n_col_blocks: int
+    s_total: int          # number of real (non-sentinel) tiles
+
+    @property
+    def density(self) -> float:
+        return self.s_total / max(1, self.n_row_blocks * self.n_col_blocks)
+
+    def nbytes(self) -> int:
+        return self.blocks.size * self.blocks.dtype.itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockMeta:
+    """Host-side planner metadata for one BlockCOO operand."""
+
+    row_ids: np.ndarray          # (s_total,) int32, sorted by row
+    col_ids: np.ndarray          # (s_total,) int32
+    # tiles-per-column-block: the Eq. 4b cost unit (each tile costs
+    # 2*bm*bk*d FLOPs in an SpMM against a (n_cols, d) dense operand).
+    col_block_tiles: np.ndarray  # (n_col_blocks,) int64
+    # Σ_{column i in block} ‖A_{:,i}‖₂  — the static half of Eq. 3 scores.
+    col_block_norm: np.ndarray   # (n_col_blocks,) float32
+    # per-column nnz — exact Eq. 4b cost for the reference (unblocked) path
+    col_nnz: np.ndarray          # (n_cols_unpadded,) int64
+    col_norm: np.ndarray         # (n_cols_unpadded,) float32
+
+
+def degree_sort_permutation(adj: CSR) -> np.ndarray:
+    """Relabel nodes by descending degree.
+
+    Returns ``perm`` with ``perm[new] = old``. Degree-sorted labeling makes
+    128-wide column blocks degree-homogeneous, so block-granular top-k
+    approximates per-column top-k well (DESIGN.md §8.1).
+    """
+    deg = adj.row_nnz()
+    # stable sort for determinism
+    return np.argsort(-deg, kind="stable").astype(np.int64)
+
+
+def csr_to_bcoo(
+    csr: CSR,
+    bm: int = 128,
+    bk: int = 128,
+    dtype: jnp.dtype = jnp.float32,
+) -> tuple[BlockCOO, BlockMeta]:
+    """Convert host CSR to device BlockCOO + host planner metadata."""
+    n_rows_p = _ceil_to(max(csr.n_rows, 1), bm)
+    n_cols_p = _ceil_to(max(csr.n_cols, 1), bk)
+    n_rb, n_cb = n_rows_p // bm, n_cols_p // bk
+
+    rows = np.repeat(np.arange(csr.n_rows, dtype=np.int64), csr.row_nnz())
+    cols = csr.col.astype(np.int64)
+    rb, cb = rows // bm, cols // bk
+    key = rb * n_cb + cb
+    uniq, inverse = np.unique(key, return_inverse=True)
+    s_total = int(uniq.shape[0])
+
+    blocks = np.zeros((s_total + 1, bm, bk), dtype=np.float32)
+    np.add.at(blocks, (inverse, rows % bm, cols % bk), csr.val)
+
+    u_rb = (uniq // n_cb).astype(np.int32)
+    u_cb = (uniq % n_cb).astype(np.int32)
+    # np.unique returns sorted keys => already sorted by (row_block, col_block)
+
+    col_block_tiles = np.zeros(n_cb, dtype=np.int64)
+    np.add.at(col_block_tiles, u_cb, 1)
+
+    col_norm = csr.column_norms()
+    col_nnz = csr.column_nnz()
+    cb_of_col = np.arange(csr.n_cols) // bk
+    col_block_norm = np.zeros(n_cb, dtype=np.float64)
+    np.add.at(col_block_norm, cb_of_col, col_norm.astype(np.float64))
+
+    bcoo = BlockCOO(
+        blocks=jnp.asarray(blocks, dtype=dtype),
+        row_ids=jnp.asarray(u_rb),
+        col_ids=jnp.asarray(u_cb),
+        bm=bm, bk=bk,
+        n_rows=n_rows_p, n_cols=n_cols_p,
+        n_row_blocks=n_rb, n_col_blocks=n_cb,
+        s_total=s_total,
+    )
+    meta = BlockMeta(
+        row_ids=u_rb, col_ids=u_cb,
+        col_block_tiles=col_block_tiles,
+        col_block_norm=col_block_norm.astype(np.float32),
+        col_nnz=col_nnz, col_norm=col_norm,
+    )
+    return bcoo, meta
+
+
+def bcoo_to_dense(b: BlockCOO) -> jax.Array:
+    """Densify (tests/oracles only)."""
+    out = jnp.zeros((b.n_row_blocks, b.n_col_blocks, b.bm, b.bk),
+                    dtype=b.blocks.dtype)
+    out = out.at[b.row_ids, b.col_ids].add(b.blocks[: b.s_total])
+    return out.transpose(0, 2, 1, 3).reshape(b.n_rows, b.n_cols)

@@ -1,0 +1,7 @@
+"""Training substrate: optimizer, metrics, RSC training loop."""
+from repro.train.optimizer import Adam, apply_updates, clip_by_global_norm
+from repro.train.metrics import accuracy, auc_score, f1_micro
+from repro.train.loop import GNNTrainer, TrainConfig
+
+__all__ = ["Adam", "apply_updates", "clip_by_global_norm",
+           "accuracy", "auc_score", "f1_micro", "GNNTrainer", "TrainConfig"]

@@ -1,0 +1,102 @@
+"""Jit-able LM steps: train (grad-accum microbatched), prefill, decode.
+
+These are the functions the multi-pod dry-run lowers for every
+(arch × shape × mesh) cell, and the smoke tests execute at reduced size.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm.backbone import forward, init_cache
+from repro.models.lm.config import LMConfig
+from repro.train.optimizer import Adam, apply_updates
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Mean token NLL; logits f32 (b, t, v).
+
+    Sharded-vocab-safe formulation (EXPERIMENTS.md §Perf H1): with the vocab
+    dim TP-sharded, ``take_along_axis`` would force an all-gather of the full
+    (b, t, V) logits; the one-hot contraction + logsumexp keeps everything
+    local except two (b, t)-sized all-reduces.
+    """
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
+    picked = jnp.sum(logits * onehot, axis=-1)
+    return (lse - picked).mean()
+
+
+def _fwd_kwargs(batch: dict) -> dict:
+    return {k: batch[k] for k in ("tokens", "embeds", "cross_states")
+            if k in batch}
+
+
+def make_train_step(cfg: LMConfig, opt: Adam, n_microbatches: int = 1,
+                    rsc: dict | None = None):
+    def loss_fn(params, mb):
+        logits, _ = forward(params, cfg, mode="train", rsc=rsc,
+                            **_fwd_kwargs(mb))
+        return cross_entropy(logits, mb["targets"])
+
+    def train_step(params, opt_state, batch):
+        if n_microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def resh(x):
+                return x.reshape(n_microbatches, x.shape[0] // n_microbatches,
+                                 *x.shape[1:])
+            mbs = jax.tree.map(resh, batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+
+            def body(carry, mb):
+                gacc, lacc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                gacc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gacc, g)
+                return (gacc, lacc + l), None
+
+            from repro.models.lm.flags import scan_unroll
+            (gsum, lsum), _ = jax.lax.scan(body, (g0, 0.0), mbs,
+                                           unroll=scan_unroll())
+            grads = jax.tree.map(lambda g: g / n_microbatches, gsum)
+            loss = lsum / n_microbatches
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_prefill_step(cfg: LMConfig):
+    def prefill_step(params, batch):
+        logits, cache = forward(params, cfg, mode="prefill", last_only=True,
+                                **_fwd_kwargs(batch))
+        return logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: LMConfig):
+    def decode_step(params, cache, batch):
+        logits, cache = forward(params, cfg, mode="decode", cache=cache,
+                                **_fwd_kwargs(batch))
+        return logits, cache
+
+    return decode_step
+
+
+def abstract_state(cfg: LMConfig, opt: Adam, key=None):
+    """(params, opt_state) as ShapeDtypeStructs — dry-run state, no alloc."""
+    from repro.models.lm.backbone import init_params
+    key = key if key is not None else jax.random.PRNGKey(0)
+    params = jax.eval_shape(partial(init_params, cfg=cfg), key)
+    opt_state = jax.eval_shape(opt.init, params)
+    return params, opt_state
+
+
+def abstract_cache(cfg: LMConfig, batch: int, max_len: int):
+    return jax.eval_shape(partial(init_cache, cfg, batch, max_len))

@@ -1,0 +1,83 @@
+"""Hand-rolled optimizers (no optax in the container).
+
+Pytree-based Adam/AdamW with decoupled weight decay and global-norm clip;
+f32 moment state regardless of param dtype (bf16-safe for the LM stack).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def _is_leaf_none(x):
+    return x is None
+
+
+def tree_zeros_f32(params):
+    return jax.tree.map(
+        lambda p: None if p is None else jnp.zeros(p.shape, jnp.float32),
+        params, is_leaf=_is_leaf_none)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = [g for g in jax.tree.leaves(grads) if g is not None]
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(
+        lambda g: None if g is None else g * scale, grads,
+        is_leaf=_is_leaf_none), gn
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: None if p is None else (p + u.astype(p.dtype)),
+        params, updates, is_leaf=_is_leaf_none)
+
+
+@dataclasses.dataclass(frozen=True)
+class Adam:
+    lr: float = 1e-2
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0   # decoupled (AdamW) when > 0
+    clip_norm: float | None = None
+
+    def init(self, params) -> dict[str, Any]:
+        return {"m": tree_zeros_f32(params), "v": tree_zeros_f32(params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params):
+        if self.clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, self.clip_norm)
+        count = state["count"] + 1
+        b1c = 1.0 - self.b1 ** count.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** count.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            if g is None:
+                return None, None, None
+            g32 = g.astype(jnp.float32)
+            m = self.b1 * m + (1 - self.b1) * g32
+            v = self.b2 * v + (1 - self.b2) * g32 * g32
+            mh, vh = m / b1c, v / b2c
+            step = -self.lr * mh / (jnp.sqrt(vh) + self.eps)
+            if self.weight_decay:
+                step = step - self.lr * self.weight_decay * \
+                    p.astype(jnp.float32)
+            return step, m, v
+
+        flat_g, treedef = jax.tree.flatten(grads, is_leaf=_is_leaf_none)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, m, v, p)
+               for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        steps = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return steps, {"m": new_m, "v": new_v, "count": count}

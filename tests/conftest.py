@@ -1,0 +1,32 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests see 1 CPU device;
+only launch/dryrun.py forces 512 host devices (per spec)."""
+import numpy as np
+import pytest
+
+from repro.graphs.synthetic import sbm_graph
+from repro.sparse.csr import CSR
+
+
+@pytest.fixture(scope="session")
+def small_graph():
+    return sbm_graph(n_nodes=400, n_clusters=5, avg_degree=10, feat_dim=16,
+                     seed=0)
+
+
+@pytest.fixture(scope="session")
+def small_csr(small_graph):
+    return small_graph.adj
+
+
+def random_csr(n: int, density: float, seed: int = 0,
+               symmetric: bool = True) -> CSR:
+    rng = np.random.default_rng(seed)
+    mask = rng.random((n, n)) < density
+    if symmetric:
+        mask |= mask.T
+    np.fill_diagonal(mask, False)
+    rows, cols = np.nonzero(mask)
+    vals = rng.standard_normal(rows.shape[0]).astype(np.float32) \
+        if not symmetric else np.ones(rows.shape[0], np.float32)
+    return CSR.from_coo(rows.astype(np.int64), cols.astype(np.int64),
+                        vals, (n, n))

@@ -1,0 +1,82 @@
+"""Paper Table 1: approximating the FORWARD SpMM collapses accuracy, the
+backward-only approximation does not (Prop. 3.1). We reproduce the
+mechanism at test scale with an explicitly-biased forward approximation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import random_csr
+from repro.core import build_plan, exact_spmm, rsc_spmm
+from repro.core.plan import SamplePlan
+from repro.core.rsc_spmm import spmm_apply
+from repro.sparse.bcoo import csr_to_bcoo
+from repro.sparse.topology import sym_normalize
+
+
+def test_forward_approx_is_biased_through_relu():
+    """E[ReLU(approx(x))] ≠ ReLU(E[approx(x)]) — the paper's §3.1.2 argument
+    demonstrated numerically with an unbiased randomized estimator."""
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(2000)
+    noise = rng.standard_normal((500, 2000))  # unbiased: E[x+n] = x
+    relu_of_mean = np.maximum(x, 0)
+    mean_of_relu = np.maximum(x[None] + noise, 0).mean(0)
+    bias = np.abs(mean_of_relu - relu_of_mean).mean()
+    assert bias > 0.05  # systematic positive bias
+
+
+def test_backward_only_gradient_agrees_in_expectation():
+    """With backward-only sampling at full keep the gradient is exact; with
+    partial keep, the masked-transpose identity holds (unbiased under the
+    top-k assumptions) — both verified in test_rsc_ops. Here: end-to-end
+    2-layer GCN-like function, forward outputs identical."""
+    csr = sym_normalize(random_csr(96, 0.1, seed=1))
+    a, _ = csr_to_bcoo(csr, bm=16, bk=16)
+    at, meta = csr_to_bcoo(csr.transpose(), bm=16, bk=16)
+    rng = np.random.default_rng(2)
+    h = jnp.asarray(rng.standard_normal((a.n_cols, 8)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((8, 8)).astype(np.float32))
+    keep = rng.random(at.n_col_blocks) < 0.4
+    plan = build_plan(meta, keep, at.n_row_blocks, at.s_total)
+
+    def f_rsc(w):
+        h1 = jax.nn.relu(rsc_spmm(a, at, plan, h @ w))
+        return jnp.sum(rsc_spmm(a, at, plan, h1) ** 2)
+
+    def f_exact(w):
+        h1 = jax.nn.relu(exact_spmm(a, at, h @ w))
+        return jnp.sum(exact_spmm(a, at, h1) ** 2)
+
+    # identical forward values (exact fwd in both)
+    assert np.allclose(float(f_rsc(w)), float(f_exact(w)), rtol=1e-5)
+    # gradient direction strongly aligned despite 60% dropped blocks
+    g1 = np.asarray(jax.grad(f_rsc)(w)).ravel()
+    g2 = np.asarray(jax.grad(f_exact)(w)).ravel()
+    cos = g1 @ g2 / (np.linalg.norm(g1) * np.linalg.norm(g2))
+    assert cos > 0.7, cos
+
+
+def test_forward_sampling_degrades_output():
+    """Directly compare forward outputs: sampled forward != exact forward,
+    with relative error growing as keep fraction shrinks."""
+    csr = sym_normalize(random_csr(96, 0.1, seed=3))
+    a, meta_a = csr_to_bcoo(csr, bm=16, bk=16)
+    rng = np.random.default_rng(4)
+    h = jnp.asarray(rng.standard_normal((a.n_cols, 8)).astype(np.float32))
+    exact = spmm_apply(
+        a.blocks,
+        SamplePlan(sel=jnp.arange(a.s_total, dtype=jnp.int32),
+                   row_ids=a.row_ids, col_ids=a.col_ids,
+                   s_pad=a.s_total, n_active=a.s_total),
+        h, a.n_row_blocks, a.bm, a.bk)
+    errs = []
+    for frac in (0.8, 0.4, 0.2):
+        keep = np.zeros(a.n_col_blocks, bool)
+        keep[: max(1, int(frac * a.n_col_blocks))] = True
+        plan = build_plan(meta_a, keep, a.n_row_blocks, a.s_total)
+        approx = spmm_apply(a.blocks, plan, h, a.n_row_blocks, a.bm, a.bk)
+        errs.append(float(jnp.linalg.norm(approx - exact)
+                          / jnp.linalg.norm(exact)))
+    assert errs[0] < errs[1] < errs[2]
+    assert errs[2] > 0.2

@@ -1,0 +1,154 @@
+"""rsc_spmm / rsc_matmul semantics: exact forward, sampled backward,
+unbiasedness (Prop. 3.1), plan/cache invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import random_csr
+from repro.core import (PlanCache, RSCSchedule, build_plan, exact_spmm,
+                        full_plan, rsc_matmul, rsc_spmm)
+from repro.sparse.bcoo import csr_to_bcoo
+from repro.sparse.topology import sym_normalize
+
+
+@pytest.fixture(scope="module")
+def op():
+    csr = sym_normalize(random_csr(120, 0.08, seed=0))
+    a, _ = csr_to_bcoo(csr, bm=16, bk=16)
+    at, at_meta = csr_to_bcoo(csr.transpose(), bm=16, bk=16)
+    dense = np.zeros((a.n_rows, a.n_cols), np.float32)
+    dense[:120, :120] = csr.to_dense()
+    return a, at, at_meta, dense
+
+
+def test_forward_exact_always(op):
+    """Prop 3.1 precondition: forward is NEVER approximated."""
+    a, at, meta, dense = op
+    h = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (a.n_cols, 12)).astype(np.float32))
+    keep = np.zeros(at.n_col_blocks, bool)
+    keep[:2] = True  # aggressive sampling
+    plan = build_plan(meta, keep, at.n_row_blocks, at.s_total)
+    out = rsc_spmm(a, at, plan, h)
+    assert np.allclose(np.asarray(out), dense @ np.asarray(h), atol=1e-4)
+
+
+def test_backward_matches_masked_transpose(op):
+    a, at, meta, dense = op
+    rng = np.random.default_rng(1)
+    h = jnp.asarray(rng.standard_normal((a.n_cols, 8)).astype(np.float32))
+    keep = rng.random(at.n_col_blocks) < 0.5
+    keep[0] = True
+    plan = build_plan(meta, keep, at.n_row_blocks, at.s_total, bucket=8)
+    g = jax.grad(lambda x: jnp.sum(rsc_spmm(a, at, plan, x) ** 2))(h)
+    keep_cols = np.repeat(keep, at.bk)[: at.n_cols]
+    atd = dense.T.copy()
+    atd[:, ~keep_cols[: dense.shape[0]]] = 0
+    gref = atd @ (2 * dense @ np.asarray(h))
+    assert np.allclose(np.asarray(g), gref, atol=1e-3)
+
+
+def test_gradient_unbiased_vs_exact_at_full_budget(op):
+    a, at, meta, dense = op
+    h = jnp.asarray(np.random.default_rng(2).standard_normal(
+        (a.n_cols, 8)).astype(np.float32))
+    plan = full_plan(meta, at.n_row_blocks, at.s_total)
+    g_rsc = jax.grad(lambda x: jnp.sum(rsc_spmm(a, at, plan, x) ** 2))(h)
+    g_ex = jax.grad(lambda x: jnp.sum(exact_spmm(a, at, x) ** 2))(h)
+    assert np.allclose(np.asarray(g_rsc), np.asarray(g_ex), atol=1e-5)
+
+
+def test_plan_invariants(op):
+    a, at, meta, dense = op
+    rng = np.random.default_rng(3)
+    keep = rng.random(at.n_col_blocks) < 0.3
+    plan = build_plan(meta, keep, at.n_row_blocks, at.s_total, bucket=16)
+    rows = np.asarray(plan.row_ids)
+    # sorted, covers every row block, padded to bucket
+    assert (np.diff(rows) >= 0).all()
+    assert set(range(at.n_row_blocks)) <= set(rows.tolist())
+    assert plan.s_pad % 16 == 0
+    # padding points at the sentinel
+    sel = np.asarray(plan.sel)
+    n_real = int((sel != at.s_total).sum())
+    assert n_real == plan.n_active
+
+
+def test_relu_backward_mask_independence(op):
+    """Prop. 3.1's mechanism: the ReLU mask comes from the EXACT forward, so
+    it is identical between exact and sampled backward paths."""
+    a, at, meta, dense = op
+    h = jnp.asarray(np.random.default_rng(4).standard_normal(
+        (a.n_cols, 6)).astype(np.float32))
+    keep = np.zeros(at.n_col_blocks, bool)
+    keep[::2] = True
+    plan = build_plan(meta, keep, at.n_row_blocks, at.s_total)
+
+    mask_rsc = jax.nn.relu(rsc_spmm(a, at, plan, h)) > 0
+    mask_ex = jax.nn.relu(exact_spmm(a, at, h)) > 0
+    assert np.array_equal(np.asarray(mask_rsc), np.asarray(mask_ex))
+
+
+# ------------------------------ rsc_matmul ----------------------------------
+
+def test_rsc_matmul_full_keep_exact():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((256, 24)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((24, 16)).astype(np.float32))
+    gw = jax.grad(lambda ww: jnp.sum(rsc_matmul(x, ww, 1.0, 64) ** 2))(w)
+    gw_ref = jax.grad(lambda ww: jnp.sum((x @ ww) ** 2))(w)
+    assert np.allclose(np.asarray(gw), np.asarray(gw_ref), atol=1e-3)
+
+
+def test_rsc_matmul_dx_always_exact():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((256, 24)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((24, 16)).astype(np.float32))
+    gx = jax.grad(lambda xx: jnp.sum(rsc_matmul(xx, w, 0.25, 64) ** 2))(x)
+    gx_ref = jax.grad(lambda xx: jnp.sum((xx @ w) ** 2))(x)
+    assert np.allclose(np.asarray(gx), np.asarray(gx_ref), atol=1e-3)
+
+
+def test_rsc_matmul_keeps_topk_blocks():
+    """dW under keep_frac=0.5 equals the contraction restricted to the
+    highest-norm half of the token blocks."""
+    rng = np.random.default_rng(2)
+    x = np.zeros((256, 8), np.float32)
+    x[:64] = 10 * rng.standard_normal((64, 8))      # blocks 0-1 dominate
+    x[64:] = 0.01 * rng.standard_normal((192, 8))
+    xj, w = jnp.asarray(x), jnp.asarray(
+        rng.standard_normal((8, 4)).astype(np.float32))
+    gw = jax.grad(lambda ww: jnp.sum(rsc_matmul(xj, ww, 0.5, 64) ** 2))(w)
+    y = x @ np.asarray(w)
+    g = 2 * y
+    gw_ref = x[:128].T @ g[:128]  # top 2 of 4 blocks = first 128 rows
+    assert np.allclose(np.asarray(gw), gw_ref, atol=1e-2)
+
+
+# ------------------------------ schedule/cache -------------------------------
+
+def test_schedule_switchback():
+    s = RSCSchedule(total_steps=100, rsc_fraction=0.8, refresh_every=10)
+    assert s.use_rsc(0) and s.use_rsc(79)
+    assert not s.use_rsc(80) and not s.use_rsc(99)
+    assert s.refresh_due(10) and not s.refresh_due(11)
+    assert not s.refresh_due(90)  # no refresh after switch-back
+
+
+def test_plan_cache_refresh_updates_plans(op):
+    a, at, meta, dense = op
+    cache = PlanCache(budget_frac=0.3)
+    cache.register("l0", at, meta, d=16, a_fro=1.0)
+    cache.register("l1", at, meta, d=16, a_fro=1.0)
+    p0 = cache.plans()
+    assert p0["l0"].n_active == at.s_total  # starts exact
+    rng = np.random.default_rng(0)
+    norms = {n: rng.random(at.n_cols).astype(np.float32)
+             for n in ("l0", "l1")}
+    alloc = cache.refresh(norms)
+    assert alloc.cost <= alloc.budget + 1e-9
+    assert cache.flops_fraction() <= 0.3 + 1e-9
+    assert cache.stats.refreshes == 1
+    # caching: plans are reused objects until next refresh
+    assert cache.plans()["l0"] is cache.plans()["l0"]

@@ -1,0 +1,82 @@
+"""CSR / BlockCOO / topology unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import random_csr
+from repro.sparse.bcoo import bcoo_to_dense, csr_to_bcoo, \
+    degree_sort_permutation
+from repro.sparse.csr import CSR
+from repro.sparse.topology import mean_normalize, sym_normalize
+
+
+def test_csr_roundtrip_dense():
+    csr = random_csr(50, 0.1, seed=1, symmetric=False)
+    d = csr.to_dense()
+    r = np.repeat(np.arange(50), csr.row_nnz())
+    assert np.allclose(d[r, csr.col], csr.val)
+    assert csr.nnz == int((d != 0).sum())
+
+
+def test_csr_transpose():
+    csr = random_csr(40, 0.1, seed=2, symmetric=False)
+    assert np.allclose(csr.transpose().to_dense(), csr.to_dense().T)
+
+
+def test_csr_permute_symmetric_relabel():
+    csr = random_csr(30, 0.15, seed=3)
+    perm = degree_sort_permutation(csr)
+    p = csr.permute(perm)
+    d0, d1 = csr.to_dense(), p.to_dense()
+    assert np.allclose(d1, d0[np.ix_(perm, perm)])
+    # degree-sorted: non-increasing
+    deg = p.row_nnz()
+    assert (np.diff(deg) <= 0).all()
+
+
+def test_column_norms_match_dense():
+    csr = random_csr(35, 0.1, seed=4, symmetric=False)
+    assert np.allclose(csr.column_norms(),
+                       np.linalg.norm(csr.to_dense(), axis=0), atol=1e-5)
+
+
+def test_sym_normalize_rows():
+    csr = random_csr(64, 0.1, seed=5)
+    a = sym_normalize(csr).to_dense()
+    # spectral radius of sym-normalized adj ≤ 1
+    w = np.linalg.eigvalsh(a)
+    assert w.max() <= 1.0 + 1e-5
+
+
+def test_mean_normalize_row_sums():
+    csr = random_csr(64, 0.1, seed=6)
+    m = mean_normalize(csr).to_dense()
+    sums = m.sum(1)
+    deg = csr.row_nnz()
+    assert np.allclose(sums[deg > 0], 1.0, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(8, 80), density=st.floats(0.02, 0.3),
+       bm=st.sampled_from([4, 8, 16]), seed=st.integers(0, 100))
+def test_bcoo_roundtrip_property(n, density, bm, seed):
+    csr = random_csr(n, density, seed=seed, symmetric=False)
+    if csr.nnz == 0:
+        return
+    b, meta = csr_to_bcoo(csr, bm=bm, bk=bm)
+    dense = np.zeros((b.n_rows, b.n_cols), np.float32)
+    dense[:n, :n] = csr.to_dense()
+    assert np.allclose(np.asarray(bcoo_to_dense(b)), dense, atol=1e-6)
+    # metadata invariants
+    assert meta.col_block_tiles.sum() == b.s_total
+    assert (np.diff(np.asarray(b.row_ids)) >= 0).all()  # sorted by row
+    # sentinel tile is zero
+    assert np.asarray(b.blocks[-1]).sum() == 0
+
+
+def test_bcoo_meta_col_norms(small_csr):
+    a = sym_normalize(small_csr)
+    _, meta = csr_to_bcoo(a, bm=32, bk=32)
+    ref = np.add.reduceat(a.column_norms(),
+                          np.arange(0, a.n_cols, 32))
+    assert np.allclose(meta.col_block_norm[: len(ref)], ref, atol=1e-4)
