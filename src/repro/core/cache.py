@@ -59,19 +59,34 @@ class PlanCache:
         step_frac: float = 0.02,
         bucket_frac: float = 1 / 16,
         strategy: str = "greedy",   # or "uniform" (Fig. 6 baseline)
+        plan_pad: int | None = None,
     ):
         self.budget_frac = budget_frac
         self.step_frac = step_frac
         self.bucket_frac = bucket_frac
         self.strategy = strategy
+        # Fixed absolute plan length. When set, every plan this cache builds
+        # (full and sampled) pads to exactly ``plan_pad`` entries, so ALL
+        # plans of a shape bucket share one jit signature and the minibatch
+        # train step compiles once per bucket instead of once per allocation.
+        self.plan_pad = plan_pad
         self.ops: dict[str, OpEntry] = {}
         self.stats = CacheStats()
 
+    def _bucket(self, at) -> int:
+        if self.plan_pad is not None:
+            return self.plan_pad
+        return max(1, int(np.ceil(at.s_total * self.bucket_frac)))
+
     def register(self, name: str, at: BlockCOO, meta: BlockMeta, d: int,
                  a_fro: float) -> None:
+        """``at`` may be a device BlockCOO or a host mirror — only its
+        static shape attributes (and never its tiles) are read here."""
         entry = OpEntry(name=name, at=at, meta=meta, d=d, a_fro=a_fro)
         # Start exact (full plan) until the first refresh has gradient info.
-        entry.plan = full_plan(meta, at.n_row_blocks, at.s_total)
+        bucket = self.plan_pad if self.plan_pad is not None else 1
+        entry.plan = full_plan(meta, at.n_row_blocks, at.s_total,
+                               bucket=bucket)
         self.ops[name] = entry
 
     def plans(self) -> dict[str, SamplePlan]:
@@ -104,9 +119,8 @@ class PlanCache:
 
         for n, spec, keep in zip(names, layers, alloc.keep):
             e = self.ops[n]
-            bucket = max(1, int(np.ceil(e.at.s_total * self.bucket_frac)))
             e.plan = build_plan(e.meta, keep, e.at.n_row_blocks,
-                                e.at.s_total, bucket=bucket)
+                                e.at.s_total, bucket=self._bucket(e.at))
             if e.last_scores is not None:
                 self.stats.auc_history.append(
                     topk_overlap_auc(e.last_scores, keep))

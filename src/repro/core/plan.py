@@ -26,18 +26,23 @@ def _ceil_to(x: int, m: int) -> int:
 
 @partial(
     jax.tree_util.register_dataclass,
-    data_fields=["sel", "row_ids", "col_ids"],
-    meta_fields=["s_pad", "n_active"],
+    data_fields=["sel", "row_ids", "col_ids", "n_active"],
+    meta_fields=["s_pad"],
 )
 @dataclasses.dataclass(frozen=True)
 class SamplePlan:
-    """Index-list view of a (possibly sampled) BlockCOO operand."""
+    """Index-list view of a (possibly sampled) BlockCOO operand.
+
+    ``n_active`` is host bookkeeping but registered as pytree DATA, not
+    static metadata: plans with equal ``s_pad`` and different allocations
+    must hit the same jit cache entry (one compile per shape bucket).
+    """
 
     sel: jax.Array      # (s_pad,) int32 — tile index into blocks; sentinel = s_total
     row_ids: jax.Array  # (s_pad,) int32 — sorted ascending
     col_ids: jax.Array  # (s_pad,) int32
-    s_pad: int          # static grid length
     n_active: int       # real (non-sentinel) tiles — bookkeeping/FLOPs
+    s_pad: int          # static grid length
 
     def flops(self, bm: int, bk: int, d: int) -> int:
         """FLOPs of SpMM under this plan (Eq. 4b cost, block units)."""
@@ -98,6 +103,7 @@ def build_plan(
     )
 
 
-def full_plan(meta: BlockMeta, n_row_blocks: int, sentinel: int) -> SamplePlan:
+def full_plan(meta: BlockMeta, n_row_blocks: int, sentinel: int,
+              bucket: int = 1) -> SamplePlan:
     """The exact (un-sampled) plan."""
-    return build_plan(meta, None, n_row_blocks, sentinel, bucket=1)
+    return build_plan(meta, None, n_row_blocks, sentinel, bucket=bucket)

@@ -21,18 +21,21 @@ def random_walk_subgraph(
 ) -> GraphData:
     """Sample node-induced subgraph from `roots` random walks."""
     adj = g.adj
-    start = rng.choice(g.n, size=roots, replace=True)
-    visited = set(start.tolist())
+    start = rng.choice(g.n, size=roots, replace=True).astype(np.int64)
+    visited = [start]
     frontier = start
     for _ in range(walk_length):
-        nxt = np.empty_like(frontier)
-        for i, u in enumerate(frontier):
-            lo, hi = adj.rowptr[u], adj.rowptr[u + 1]
-            nxt[i] = adj.col[rng.integers(lo, hi)] if hi > lo else u
-        visited.update(nxt.tolist())
+        if adj.nnz == 0:
+            break
+        lo = adj.rowptr[frontier]
+        deg = adj.rowptr[frontier + 1] - lo
+        # one uniform draw per walker; degree-0 walkers stay put
+        off = (rng.random(frontier.shape[0]) * deg).astype(np.int64)
+        idx = np.clip(lo + off, 0, adj.nnz - 1)
+        nxt = np.where(deg > 0, adj.col[idx].astype(np.int64), frontier)
+        visited.append(nxt)
         frontier = nxt
-    nodes = np.fromiter(visited, dtype=np.int64)
-    nodes.sort()
+    nodes = np.unique(np.concatenate(visited))
     return induced_subgraph(g, nodes)
 
 

@@ -1,8 +1,12 @@
 """CLI training driver.
 
-GNN (the paper's models):
+GNN, full-batch (the paper's models):
     PYTHONPATH=src python -m repro.launch.train gnn --model gcn \
         --dataset reddit --scale 0.01 --rsc --budget 0.1 --epochs 100
+
+GNN, minibatch (GraphSAINT subgraph pool + per-subgraph RSC caches):
+    PYTHONPATH=src python -m repro.launch.train gnn --minibatch \
+        --dataset ogbn-products --scale 0.002 --rsc --subgraphs 16
 
 LM (assigned architectures; reduced dims on CPU via --smoke):
     PYTHONPATH=src python -m repro.launch.train lm --arch qwen2-0.5b \
@@ -21,6 +25,7 @@ from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs import get_arch, make_batch, smoke_config
 from repro.graphs.datasets import DATASETS, load_dataset
 from repro.models.lm.backbone import init_params
+from repro.pipeline import MinibatchConfig, MinibatchTrainer
 from repro.train.lm_steps import make_train_step
 from repro.train.loop import GNNTrainer, TrainConfig
 from repro.train.optimizer import Adam
@@ -29,22 +34,38 @@ from repro.train.optimizer import Adam
 def run_gnn(args) -> dict:
     spec = DATASETS[args.dataset]
     g = load_dataset(args.dataset, scale=args.scale, seed=args.seed)
-    cfg = TrainConfig(
+    common = dict(
         model=args.model, n_layers=args.layers, hidden=args.hidden,
         epochs=args.epochs, lr=args.lr, dropout=args.dropout,
         metric=spec.metric, rsc=args.rsc, budget=args.budget,
         caching=not args.no_caching, switching=not args.no_switching,
         strategy=args.strategy, block=args.block, seed=args.seed,
         backend=args.backend)
-    tr = GNNTrainer(cfg, g)
+    extra: dict = {}
+    if args.minibatch:
+        cfg = MinibatchConfig(
+            n_subgraphs=args.subgraphs, method=args.pool_method,
+            roots=args.roots, walk_length=args.walk_length,
+            n_buckets=args.buckets, prefetch=not args.no_prefetch,
+            **common)
+        tr = MinibatchTrainer(cfg, g)
+    else:
+        tr = GNNTrainer(TrainConfig(**common), g)
     t0 = time.perf_counter()
     res = tr.train(verbose=args.verbose)
     res["wall_s"] = time.perf_counter() - t0
+    if args.minibatch:
+        extra = {"minibatch": True, "pool": args.pool_method,
+                 "subgraphs": args.subgraphs,
+                 "n_buckets": res["n_buckets"],
+                 "compiles": res["compiles"],
+                 "plan_hit_rate": res["plan_hit_rate"]}
     print(json.dumps({
         "model": args.model, "dataset": args.dataset,
         "rsc": args.rsc, "budget": args.budget,
         "best_test": res["best_test"], "wall_s": round(res["wall_s"], 2),
         "flops_fraction": res["flops_fraction"],
+        **extra,
     }))
     return res
 
@@ -107,6 +128,15 @@ def main():
                    choices=["greedy", "uniform"])
     g.add_argument("--block", type=int, default=64)
     g.add_argument("--backend", default="jnp")
+    g.add_argument("--minibatch", action="store_true",
+                   help="GraphSAINT subgraph-pool training (pipeline/)")
+    g.add_argument("--subgraphs", type=int, default=8)
+    g.add_argument("--pool-method", default="random_walk",
+                   choices=["random_walk", "ldg"])
+    g.add_argument("--roots", type=int, default=200)
+    g.add_argument("--walk-length", type=int, default=4)
+    g.add_argument("--buckets", type=int, default=2)
+    g.add_argument("--no-prefetch", action="store_true")
     g.add_argument("--seed", type=int, default=0)
     g.add_argument("--verbose", action="store_true")
     g.set_defaults(fn=run_gnn)

@@ -26,12 +26,18 @@ from repro.sparse.topology import mean_normalize, sym_normalize
 @partial(
     jax.tree_util.register_dataclass,
     data_fields=["a", "at", "am", "amt", "features", "labels", "train_mask",
-                 "val_mask", "test_mask"],
-    meta_fields=["n_valid", "num_classes", "multilabel"],
+                 "val_mask", "test_mask", "n_valid"],
+    meta_fields=["num_classes", "multilabel"],
 )
 @dataclasses.dataclass(frozen=True)
 class GraphOperands:
-    """Device-resident graph operands (padded to block multiples)."""
+    """Device-resident graph operands (padded to block multiples).
+
+    ``n_valid`` is pytree DATA (not static metadata) so subgraphs padded to a
+    shared bucket shape but with different real node counts hit the same jit
+    cache entry — the property the minibatch pipeline's shape bucketing
+    relies on.
+    """
 
     a: BlockCOO          # sym-normalized Ã (GCN/GCNII propagation)
     at: BlockCOO         # Ãᵀ
@@ -42,7 +48,7 @@ class GraphOperands:
     train_mask: jax.Array
     val_mask: jax.Array
     test_mask: jax.Array
-    n_valid: int
+    n_valid: int | jax.Array   # real (un-padded) node count
     num_classes: int
     multilabel: bool
 
@@ -57,6 +63,30 @@ class OperandMeta:
     am_fro: float
 
 
+def degree_sorted_arrays(adj, feats, labels, tr, va, te):
+    """Relabel nodes by descending degree; permuted copies + the perm."""
+    perm = degree_sort_permutation(adj)
+    return (adj.permute(perm), feats[perm], labels[perm],
+            tr[perm], va[perm], te[perm], perm)
+
+
+def pad_node_arrays(n_pad: int, feats, labels, tr, va, te,
+                    multilabel: bool):
+    """Pad per-node host arrays to ``n_pad`` rows (labels in device dtype:
+    f32 one-hots for multilabel, int32 class ids otherwise)."""
+    pad = n_pad - feats.shape[0]
+
+    def padf(x, fill=0):
+        width = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+        return np.pad(x, width, constant_values=fill)
+
+    labels_p = (padf(labels).astype(np.float32) if multilabel
+                else padf(labels).astype(np.int32))
+    return (padf(feats).astype(np.float32), labels_p,
+            padf(tr).astype(bool), padf(va).astype(bool),
+            padf(te).astype(bool))
+
+
 def build_operands(
     g: GraphData, bm: int = 128, bk: int = 128, degree_sort: bool = True,
 ) -> tuple[GraphOperands, OperandMeta]:
@@ -64,10 +94,8 @@ def build_operands(
     feats, labels = g.features, g.labels
     tr, va, te = g.train_mask, g.val_mask, g.test_mask
     if degree_sort:
-        perm = degree_sort_permutation(adj)
-        adj = adj.permute(perm)
-        feats, labels = feats[perm], labels[perm]
-        tr, va, te = tr[perm], va[perm], te[perm]
+        adj, feats, labels, tr, va, te, _ = degree_sorted_arrays(
+            adj, feats, labels, tr, va, te)
 
     a_csr = sym_normalize(adj)
     am_csr = mean_normalize(adj)
@@ -76,23 +104,15 @@ def build_operands(
     am, _ = csr_to_bcoo(am_csr, bm, bk)
     amt, amt_meta = csr_to_bcoo(am_csr.transpose(), bm, bk)
 
-    n_pad = a.n_rows
-    pad = n_pad - g.n
-
-    def padf(x, fill=0):
-        width = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
-        return np.pad(x, width, constant_values=fill)
-
-    labels_dev = (jnp.asarray(padf(labels.astype(np.float32)))
-                  if g.multilabel
-                  else jnp.asarray(padf(labels.astype(np.int32))))
+    feats_p, labels_p, tr_p, va_p, te_p = pad_node_arrays(
+        a.n_rows, feats, labels, tr, va, te, g.multilabel)
     ops = GraphOperands(
         a=a, at=at, am=am, amt=amt,
-        features=jnp.asarray(padf(feats)),
-        labels=labels_dev,
-        train_mask=jnp.asarray(padf(tr)),
-        val_mask=jnp.asarray(padf(va)),
-        test_mask=jnp.asarray(padf(te)),
+        features=jnp.asarray(feats_p),
+        labels=jnp.asarray(labels_p),
+        train_mask=jnp.asarray(tr_p),
+        val_mask=jnp.asarray(va_p),
+        test_mask=jnp.asarray(te_p),
         n_valid=g.n,
         num_classes=g.num_classes,
         multilabel=g.multilabel,

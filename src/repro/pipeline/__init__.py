@@ -1,0 +1,15 @@
+"""Minibatch subgraph pipeline: partitioned GraphSAINT training with
+per-subgraph RSC plan caches and double-buffered prefetch."""
+from repro.pipeline.minibatch_loop import MinibatchConfig, MinibatchTrainer
+from repro.pipeline.partition import (Bucket, HostSubgraph, PoolConfig,
+                                      SubgraphPool, build_pool,
+                                      ldg_partition, make_buckets)
+from repro.pipeline.plan_pool import PlanCachePool, PoolPlanStats
+from repro.pipeline.prefetch import Prefetcher, device_operands
+
+__all__ = [
+    "Bucket", "HostSubgraph", "MinibatchConfig", "MinibatchTrainer",
+    "PlanCachePool", "PoolConfig", "PoolPlanStats", "Prefetcher",
+    "SubgraphPool", "build_pool", "device_operands", "ldg_partition",
+    "make_buckets",
+]

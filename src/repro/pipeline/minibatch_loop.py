@@ -1,0 +1,228 @@
+"""Minibatch GraphSAINT training with per-subgraph RSC (paper Table 3 rows).
+
+Composes the pipeline pieces into the end-to-end engine:
+
+* offline subgraph pool with shape bucketing (``partition``),
+* per-subgraph plan caches on their own refresh clocks (``plan_pool``),
+* double-buffered host→device prefetch (``prefetch``),
+* the SAME jitted step functions as the full-batch loop
+  (``train/steps.py``), so step math is shared, not duplicated.
+
+The switch-back schedule (§3.3.2) runs on the GLOBAL step counter
+(epochs × subgraphs): the last (1−rsc_fraction) of all minibatch steps are
+exact, mirroring the full-batch loop's tail.
+
+One epoch = one pass over the pool in a seeded random order. With the
+``ldg`` partitioner the parts are disjoint and cover the graph, so an epoch
+touches every training node exactly once, like classic minibatch SGD.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+
+import jax
+import numpy as np
+
+from repro.core.schedule import RSCSchedule
+from repro.graphs.synthetic import GraphData
+from repro.models.gnn import MODELS
+from repro.pipeline.partition import PoolConfig, SubgraphPool, build_pool
+from repro.pipeline.plan_pool import PlanCachePool
+from repro.pipeline.prefetch import Prefetcher
+from repro.train.loop import TrainConfig
+from repro.train.metrics import metric_fn
+from repro.train.optimizer import Adam
+from repro.train.steps import make_gnn_steps
+
+
+@dataclasses.dataclass
+class MinibatchConfig(TrainConfig):
+    """TrainConfig + pool/prefetch knobs. ``epochs`` = passes over pool."""
+
+    n_subgraphs: int = 8
+    method: str = "random_walk"      # or "ldg"
+    roots: int = 200
+    walk_length: int = 4
+    n_buckets: int = 2
+    prefetch: bool = True
+    prefetch_depth: int = 2
+    resident: int = 0                # device-resident subgraph cache size
+
+
+def _jit_compiles(jitted) -> int | None:
+    """Number of tracings a jitted fn accumulated (None if unsupported)."""
+    try:
+        return int(jitted._cache_size())
+    except AttributeError:
+        return None
+
+
+class MinibatchTrainer:
+    """GraphSAINT-style minibatch trainer over a bucketed subgraph pool."""
+
+    def __init__(self, cfg: MinibatchConfig, graph: GraphData | None = None,
+                 pool: SubgraphPool | None = None):
+        if pool is None:
+            if graph is None:
+                raise ValueError("need a graph or a prebuilt pool")
+            pool = build_pool(
+                graph,
+                PoolConfig(n_subgraphs=cfg.n_subgraphs, method=cfg.method,
+                           roots=cfg.roots, walk_length=cfg.walk_length,
+                           n_buckets=cfg.n_buckets, block=cfg.block,
+                           degree_sort=cfg.degree_sort, seed=cfg.seed),
+                mean_agg=MODELS[cfg.model].uses_mean_agg())
+        self.cfg = cfg
+        self.pool = pool
+        self.module = MODELS[cfg.model]
+        if self.module.uses_mean_agg() != pool.mean_agg:
+            raise ValueError(
+                f"pool built with mean_agg={pool.mean_agg} but model "
+                f"{cfg.model!r} needs mean_agg={self.module.uses_mean_agg()}")
+
+        self.n_classes = pool.num_classes
+        key = jax.random.PRNGKey(cfg.seed)
+        self.params = self.module.init(
+            key, pool.feat_dim, cfg.hidden, self.n_classes, cfg.n_layers,
+            cfg.batchnorm)
+        self.opt = Adam(lr=cfg.lr, weight_decay=cfg.weight_decay)
+        self.opt_state = self.opt.init(self.params)
+
+        total_steps = cfg.epochs * len(pool)
+        rsc_frac = cfg.rsc_fraction if cfg.switching else 1.0
+        refresh = cfg.refresh_every if cfg.caching else 1
+        self.schedule = RSCSchedule(
+            total_steps=total_steps, rsc_fraction=rsc_frac,
+            refresh_every=refresh, allocate_every=refresh)
+
+        names = self.module.spmm_names(cfg.n_layers)
+        dims = self.module.spmm_dims(cfg.n_layers, cfg.hidden,
+                                     self.n_classes)
+        self.plan_pool = PlanCachePool(
+            pool, names, dims,
+            budget_frac=cfg.budget, step_frac=cfg.step_frac,
+            strategy=cfg.strategy,
+            refresh_every=refresh) if cfg.rsc else None
+
+        rsc_step, exact_step, eval_logits = make_gnn_steps(
+            self.module, self.opt, dims, names,
+            dropout=cfg.dropout, backend=cfg.backend)
+        self._rsc_step = jax.jit(rsc_step)
+        self._exact_step = jax.jit(exact_step)
+        self._eval = jax.jit(eval_logits)
+
+        self._order_rng = np.random.default_rng(cfg.seed)
+        # Resident device-operand LRU shared by train epochs and eval sweeps
+        # (None => stream every visit).
+        self._device_cache = OrderedDict() if cfg.resident > 0 else None
+        self.history: dict[str, list] = {
+            "loss": [], "val": [], "test": [], "step_time": [],
+            "mode": [], "sub_id": []}
+
+    # ------------------------------------------------------------------
+    def _epoch_schedule(self) -> np.ndarray:
+        return self._order_rng.permutation(len(self.pool))
+
+    def train(self, epochs: int | None = None, eval_every: int = 5,
+              verbose: bool = False) -> dict:
+        cfg = self.cfg
+        epochs = epochs if epochs is not None else cfg.epochs
+        total = epochs * len(self.pool)
+        if total != self.schedule.total_steps:
+            # keep the switch-back fraction relative to the run actually
+            # executed, not the configured one
+            self.schedule = dataclasses.replace(
+                self.schedule, total_steps=total)
+        key = jax.random.PRNGKey(cfg.seed + 1)
+        mfn = metric_fn(cfg.metric)
+        best_val, best_test = -1.0, -1.0
+        gstep = 0
+
+        for epoch in range(epochs):
+            fetch = Prefetcher(
+                self.pool, self._epoch_schedule(),
+                depth=cfg.prefetch_depth, enabled=cfg.prefetch,
+                resident=cfg.resident, cache=self._device_cache)
+            for sid, ops in fetch:
+                key, sub = jax.random.split(key)
+                use_rsc = cfg.rsc and self.schedule.use_rsc(gstep)
+                t0 = time.perf_counter()
+                if use_rsc:
+                    plans = self.plan_pool.plans_for(
+                        self.pool.subgraphs[sid])
+                    params, opt_state, lv, norms = self._rsc_step(
+                        self.params, self.opt_state, ops, plans, sub)
+                    self.params, self.opt_state = params, opt_state
+                    self.plan_pool.record_norms(
+                        sid, {k: np.asarray(v) for k, v in norms.items()})
+                else:
+                    self.params, self.opt_state, lv = self._exact_step(
+                        self.params, self.opt_state, ops, sub)
+                jax.block_until_ready(lv)
+                dt = time.perf_counter() - t0
+
+                self.history["loss"].append(float(lv))
+                self.history["step_time"].append(dt)
+                self.history["mode"].append("rsc" if use_rsc else "exact")
+                self.history["sub_id"].append(int(sid))
+                gstep += 1
+
+            if epoch % eval_every == 0 or epoch == epochs - 1:
+                val, test = self.evaluate(mfn)
+                self.history["val"].append((epoch, val))
+                self.history["test"].append((epoch, test))
+                if val > best_val:
+                    best_val, best_test = val, test
+                if verbose:
+                    print(f"epoch {epoch:3d} loss "
+                          f"{self.history['loss'][-1]:.4f} "
+                          f"val {val:.4f} test {test:.4f}")
+
+        return {
+            "best_val": best_val,
+            "best_test": best_test,
+            "history": self.history,
+            "cache_stats": (self.plan_pool.stats if self.plan_pool
+                            else None),
+            "plan_hit_rate": (self.plan_pool.stats.hit_rate
+                              if self.plan_pool else None),
+            "flops_fraction": (self.plan_pool.flops_fraction()
+                               if self.plan_pool else 1.0),
+            "compiles": self.compile_counts(),
+            "n_buckets": len(self.pool.buckets),
+        }
+
+    # ------------------------------------------------------------------
+    def evaluate(self, mfn=None) -> tuple[float, float]:
+        """Pooled evaluation: metric per subgraph, weighted by the number of
+        evaluated nodes (nodes in several subgraphs count once per
+        appearance — exact for disjoint `ldg` pools)."""
+        mfn = mfn or metric_fn(self.cfg.metric)
+        cfg = self.cfg
+        acc = {"val": [0.0, 0], "test": [0.0, 0]}
+        fetch = Prefetcher(
+            self.pool, range(len(self.pool)),
+            depth=cfg.prefetch_depth, enabled=cfg.prefetch,
+            resident=cfg.resident, cache=self._device_cache)
+        for sid, ops in fetch:
+            sub = self.pool.subgraphs[sid]
+            logits = np.asarray(self._eval(self.params, ops))
+            labels = np.asarray(sub.labels)
+            valid = np.arange(logits.shape[0]) < sub.n_valid
+            for split, mask in (("val", sub.val_mask),
+                                ("test", sub.test_mask)):
+                m = mask & valid
+                cnt = int(m.sum())
+                if cnt:
+                    acc[split][0] += mfn(logits, labels, m) * cnt
+                    acc[split][1] += cnt
+        val = acc["val"][0] / max(acc["val"][1], 1)
+        test = acc["test"][0] / max(acc["test"][1], 1)
+        return val, test
+
+    def compile_counts(self) -> dict[str, int | None]:
+        return {"rsc": _jit_compiles(self._rsc_step),
+                "exact": _jit_compiles(self._exact_step),
+                "eval": _jit_compiles(self._eval)}

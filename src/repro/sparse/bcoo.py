@@ -81,6 +81,89 @@ class BlockMeta:
     col_norm: np.ndarray         # (n_cols_unpadded,) float32
 
 
+@dataclasses.dataclass(frozen=True)
+class HostBlockCOO:
+    """Host (numpy) mirror of :class:`BlockCOO`.
+
+    The minibatch pipeline keeps subgraph pools in this form so uploads can
+    be deferred to the prefetcher; ``to_device`` is the only place host tiles
+    cross to the accelerator. ``blocks`` carries the trailing zero sentinel,
+    exactly like the device layout.
+    """
+
+    blocks: np.ndarray    # (s_total + 1, bm, bk) float32, incl. sentinel
+    row_ids: np.ndarray   # (s_total,) int32, sorted ascending
+    col_ids: np.ndarray   # (s_total,) int32
+    bm: int
+    bk: int
+    n_rows: int
+    n_cols: int
+    n_row_blocks: int
+    n_col_blocks: int
+    s_total: int
+
+    def pad_to(self, n_blocks: int, s_pad: int) -> "HostBlockCOO":
+        """Pad to a bucket shape: ``n_blocks`` row/col blocks (square
+        operands only) and ``s_pad`` tiles.
+
+        Pad tiles are zero and sit at the last row block so ``row_ids`` stays
+        sorted; they are no-ops under SpMM. Used by shape bucketing so every
+        subgraph in a bucket shares one jit signature.
+        """
+        if n_blocks < self.n_row_blocks or s_pad < self.s_total:
+            raise ValueError(
+                f"bucket ({n_blocks} blocks, {s_pad} tiles) smaller than "
+                f"operand ({self.n_row_blocks} blocks, {self.s_total} tiles)")
+        if n_blocks == self.n_row_blocks and s_pad == self.s_total:
+            return self
+        if self.n_row_blocks != self.n_col_blocks:
+            raise ValueError("pad_to supports square operands only")
+        extra = s_pad - self.s_total
+        blocks = np.zeros((s_pad + 1, self.bm, self.bk), dtype=np.float32)
+        blocks[: self.s_total] = self.blocks[: self.s_total]
+        row_ids = np.concatenate(
+            [self.row_ids, np.full(extra, n_blocks - 1, np.int32)])
+        col_ids = np.concatenate([self.col_ids, np.zeros(extra, np.int32)])
+        return HostBlockCOO(
+            blocks=blocks, row_ids=row_ids, col_ids=col_ids,
+            bm=self.bm, bk=self.bk,
+            n_rows=n_blocks * self.bm, n_cols=n_blocks * self.bk,
+            n_row_blocks=n_blocks, n_col_blocks=n_blocks,
+            s_total=s_pad)
+
+    def to_device(self, dtype: jnp.dtype = jnp.float32) -> BlockCOO:
+        return BlockCOO(
+            blocks=jnp.asarray(self.blocks, dtype=dtype),
+            row_ids=jnp.asarray(self.row_ids),
+            col_ids=jnp.asarray(self.col_ids),
+            bm=self.bm, bk=self.bk,
+            n_rows=self.n_rows, n_cols=self.n_cols,
+            n_row_blocks=self.n_row_blocks, n_col_blocks=self.n_col_blocks,
+            s_total=self.s_total)
+
+    def nbytes(self) -> int:
+        return self.blocks.nbytes
+
+
+def pad_block_meta(meta: BlockMeta, n_col_blocks: int) -> BlockMeta:
+    """Extend planner metadata to a bucket-padded column-block count.
+
+    Padding blocks carry zero tiles and zero norms: the allocator treats
+    them as free zero-score columns and never selects them.
+    """
+    cur = meta.col_block_tiles.shape[0]
+    if n_col_blocks == cur:
+        return meta
+    if n_col_blocks < cur:
+        raise ValueError(f"cannot shrink meta from {cur} to {n_col_blocks}")
+    extra = n_col_blocks - cur
+    return BlockMeta(
+        row_ids=meta.row_ids, col_ids=meta.col_ids,
+        col_block_tiles=np.pad(meta.col_block_tiles, (0, extra)),
+        col_block_norm=np.pad(meta.col_block_norm, (0, extra)),
+        col_nnz=meta.col_nnz, col_norm=meta.col_norm)
+
+
 def degree_sort_permutation(adj: CSR) -> np.ndarray:
     """Relabel nodes by descending degree.
 
@@ -93,13 +176,12 @@ def degree_sort_permutation(adj: CSR) -> np.ndarray:
     return np.argsort(-deg, kind="stable").astype(np.int64)
 
 
-def csr_to_bcoo(
+def csr_to_bcoo_host(
     csr: CSR,
     bm: int = 128,
     bk: int = 128,
-    dtype: jnp.dtype = jnp.float32,
-) -> tuple[BlockCOO, BlockMeta]:
-    """Convert host CSR to device BlockCOO + host planner metadata."""
+) -> tuple[HostBlockCOO, BlockMeta]:
+    """Convert host CSR to host block-COO + planner metadata (no device)."""
     n_rows_p = _ceil_to(max(csr.n_rows, 1), bm)
     n_cols_p = _ceil_to(max(csr.n_cols, 1), bk)
     n_rb, n_cb = n_rows_p // bm, n_cols_p // bk
@@ -127,10 +209,8 @@ def csr_to_bcoo(
     col_block_norm = np.zeros(n_cb, dtype=np.float64)
     np.add.at(col_block_norm, cb_of_col, col_norm.astype(np.float64))
 
-    bcoo = BlockCOO(
-        blocks=jnp.asarray(blocks, dtype=dtype),
-        row_ids=jnp.asarray(u_rb),
-        col_ids=jnp.asarray(u_cb),
+    host = HostBlockCOO(
+        blocks=blocks, row_ids=u_rb, col_ids=u_cb,
         bm=bm, bk=bk,
         n_rows=n_rows_p, n_cols=n_cols_p,
         n_row_blocks=n_rb, n_col_blocks=n_cb,
@@ -142,7 +222,18 @@ def csr_to_bcoo(
         col_block_norm=col_block_norm.astype(np.float32),
         col_nnz=col_nnz, col_norm=col_norm,
     )
-    return bcoo, meta
+    return host, meta
+
+
+def csr_to_bcoo(
+    csr: CSR,
+    bm: int = 128,
+    bk: int = 128,
+    dtype: jnp.dtype = jnp.float32,
+) -> tuple[BlockCOO, BlockMeta]:
+    """Convert host CSR to device BlockCOO + host planner metadata."""
+    host, meta = csr_to_bcoo_host(csr, bm, bk)
+    return host.to_device(dtype), meta
 
 
 def bcoo_to_dense(b: BlockCOO) -> jax.Array:

@@ -15,17 +15,16 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cache import PlanCache
-from repro.core.sampling import row_norms
 from repro.core.schedule import RSCSchedule
 from repro.graphs.synthetic import GraphData
 from repro.models.gnn import MODELS
 from repro.models.gnn.common import build_operands
 from repro.train.metrics import metric_fn
-from repro.train.optimizer import Adam, apply_updates
+from repro.train.optimizer import Adam
+from repro.train.steps import make_gnn_steps
 
 
 @dataclasses.dataclass
@@ -96,10 +95,6 @@ class GNNTrainer:
             for n in names:
                 self.cache.register(n, at, meta, dims[n], fro)
 
-        self._tap_shapes = self.module.tap_shapes(
-            cfg.n_layers, self.ops.features.shape[0], cfg.hidden,
-            self.n_classes)
-        self._rsc_names = set(self.module.spmm_names(cfg.n_layers))
         self._build_steps()
         self.history: dict[str, list] = {
             "loss": [], "val": [], "test": [], "step_time": [],
@@ -107,57 +102,14 @@ class GNNTrainer:
         self._last_norms: dict[str, np.ndarray] | None = None
 
     # ------------------------------------------------------------------
-    def _loss(self, logits, ops):
-        valid = jnp.arange(logits.shape[0]) < ops.n_valid
-        m = (ops.train_mask & valid).astype(jnp.float32)
-        if ops.multilabel:
-            ls = jax.nn.log_sigmoid(logits)
-            lns = jax.nn.log_sigmoid(-logits)
-            per = -(ops.labels * ls + (1 - ops.labels) * lns).sum(-1)
-        else:
-            logp = jax.nn.log_softmax(logits, axis=-1)
-            per = -jnp.take_along_axis(
-                logp, ops.labels[:, None].astype(jnp.int32), axis=-1)[:, 0]
-        return jnp.sum(per * m) / jnp.maximum(jnp.sum(m), 1.0)
-
     def _build_steps(self):
         cfg = self.cfg
-        module = self.module
-
-        def rsc_step(params, opt_state, ops, plans, key):
-            taps = {k: jnp.zeros(s, jnp.float32)
-                    for k, s in self._tap_shapes.items()
-                    if k in self._rsc_names}
-
-            def loss_fn(p, t):
-                logits = module.apply(
-                    p, ops, t, plans, dropout_rate=cfg.dropout,
-                    train=True, key=key, backend=cfg.backend)
-                return self._loss(logits, ops)
-
-            (lv), (gp, gt) = jax.value_and_grad(
-                loss_fn, argnums=(0, 1))(params, taps)
-            norms = {k: row_norms(g) for k, g in gt.items()}
-            upd, opt_state = self.opt.update(gp, opt_state, params)
-            params = apply_updates(params, upd)
-            return params, opt_state, lv, norms
-
-        def exact_step(params, opt_state, ops, key):
-            def loss_fn(p):
-                logits = module.apply(
-                    p, ops, {}, None, dropout_rate=cfg.dropout,
-                    train=True, key=key, backend=cfg.backend)
-                return self._loss(logits, ops)
-
-            lv, gp = jax.value_and_grad(loss_fn)(params)
-            upd, opt_state = self.opt.update(gp, opt_state, params)
-            params = apply_updates(params, upd)
-            return params, opt_state, lv
-
-        def eval_logits(params, ops):
-            return module.apply(params, ops, {}, None, dropout_rate=0.0,
-                                train=False, key=None, backend=cfg.backend)
-
+        dims = self.module.spmm_dims(cfg.n_layers, cfg.hidden,
+                                     self.n_classes)
+        rsc_step, exact_step, eval_logits = make_gnn_steps(
+            self.module, self.opt, dims,
+            self.module.spmm_names(cfg.n_layers),
+            dropout=cfg.dropout, backend=cfg.backend)
         self._rsc_step = jax.jit(rsc_step)
         self._exact_step = jax.jit(exact_step)
         self._eval = jax.jit(eval_logits)
@@ -167,6 +119,11 @@ class GNNTrainer:
               verbose: bool = False) -> dict:
         cfg = self.cfg
         epochs = epochs if epochs is not None else cfg.epochs
+        if epochs != self.schedule.total_steps:
+            # keep the switch-back fraction relative to the run actually
+            # executed, not the configured one
+            self.schedule = dataclasses.replace(
+                self.schedule, total_steps=epochs)
         key = jax.random.PRNGKey(cfg.seed + 1)
         mfn = metric_fn(cfg.metric)
         best_val, best_test = -1.0, -1.0

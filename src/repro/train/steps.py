@@ -1,0 +1,81 @@
+"""Shared GNN train/eval step builders.
+
+Both training loops — the full-batch `train/loop.py` and the minibatch
+pipeline `pipeline/minibatch_loop.py` — jit the exact same step functions
+built here, so minibatch-vs-full-batch results differ only by the data fed
+in, never by the step math.
+
+The step functions are shape-polymorphic over the operands: tap arrays (the
+gradient-capture trick, models/gnn/common.py) take their row count from
+``ops.features`` at trace time, so one builder serves every shape bucket of
+a subgraph pool and jit recompiles once per bucket.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sampling import row_norms
+from repro.train.optimizer import apply_updates
+
+
+def gnn_loss(logits: jax.Array, ops) -> jax.Array:
+    """Masked mean cross-entropy (softmax) or sigmoid BCE (multilabel)."""
+    valid = jnp.arange(logits.shape[0]) < ops.n_valid
+    m = (ops.train_mask & valid).astype(jnp.float32)
+    if ops.multilabel:
+        ls = jax.nn.log_sigmoid(logits)
+        lns = jax.nn.log_sigmoid(-logits)
+        per = -(ops.labels * ls + (1 - ops.labels) * lns).sum(-1)
+    else:
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        per = -jnp.take_along_axis(
+            logp, ops.labels[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return jnp.sum(per * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def make_gnn_steps(module, opt, dims: dict[str, int], rsc_names,
+                   *, dropout: float, backend: str):
+    """Build (rsc_step, exact_step, eval_logits) for a GNN module.
+
+    dims: hidden dim of each RSC op's dense operand (module.spmm_dims).
+    rsc_names: the ops whose backward SpMM is sampled (module.spmm_names).
+    The returned functions are un-jitted; callers own the jit wrappers.
+    """
+    rsc_names = tuple(rsc_names)
+
+    def rsc_step(params, opt_state, ops, plans, key):
+        n_pad = ops.features.shape[0]
+        taps = {k: jnp.zeros((n_pad, dims[k]), jnp.float32)
+                for k in rsc_names}
+
+        def loss_fn(p, t):
+            logits = module.apply(
+                p, ops, t, plans, dropout_rate=dropout,
+                train=True, key=key, backend=backend)
+            return gnn_loss(logits, ops)
+
+        lv, (gp, gt) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1))(params, taps)
+        norms = {k: row_norms(g) for k, g in gt.items()}
+        upd, opt_state = opt.update(gp, opt_state, params)
+        params = apply_updates(params, upd)
+        return params, opt_state, lv, norms
+
+    def exact_step(params, opt_state, ops, key):
+        def loss_fn(p):
+            logits = module.apply(
+                p, ops, {}, None, dropout_rate=dropout,
+                train=True, key=key, backend=backend)
+            return gnn_loss(logits, ops)
+
+        lv, gp = jax.value_and_grad(loss_fn)(params)
+        upd, opt_state = opt.update(gp, opt_state, params)
+        params = apply_updates(params, upd)
+        return params, opt_state, lv
+
+    def eval_logits(params, ops):
+        return module.apply(params, ops, {}, None, dropout_rate=0.0,
+                            train=False, key=None, backend=backend)
+
+    return rsc_step, exact_step, eval_logits

@@ -6,6 +6,33 @@ import pytest
 from repro.graphs.synthetic import sbm_graph
 from repro.sparse.csr import CSR
 
+# hypothesis is an optional dev dependency: property tests skip (instead of
+# erroring at collection) when it is absent.
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+    def settings(*_a, **_k):
+        return lambda f: f
+
+    def given(*_a, **_k):
+        def deco(f):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def stub():
+                pass
+            stub.__name__ = f.__name__
+            stub.__doc__ = f.__doc__
+            return stub
+        return deco
+
+    class _AnyStrategy:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
 
 @pytest.fixture(scope="session")
 def small_graph():

@@ -1,7 +1,8 @@
 """Token pipeline determinism/sharding + int8 KV quantization."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import given, settings, st
 
 from repro.data.tokens import TokenStream
 from repro.models.lm.kv_quant import cache_bytes_ratio, dequantize_kv, \

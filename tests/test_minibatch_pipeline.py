@@ -1,0 +1,179 @@
+"""Minibatch subgraph pipeline: partitioning, bucketing, per-subgraph plan
+caches, prefetch, and agreement with the full-batch loop."""
+import numpy as np
+import pytest
+
+from repro.graphs.saint import random_walk_subgraph
+from repro.graphs.synthetic import sbm_graph
+from repro.pipeline import (MinibatchConfig, MinibatchTrainer, PlanCachePool,
+                            PoolConfig, Prefetcher, build_pool,
+                            ldg_partition)
+from repro.train.loop import GNNTrainer, TrainConfig
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return sbm_graph(n_nodes=500, n_clusters=5, avg_degree=10, feat_dim=16,
+                     seed=0)
+
+
+# ------------------------------- partition --------------------------------
+
+def test_partition_deterministic(graph):
+    cfg = PoolConfig(n_subgraphs=6, roots=60, walk_length=3, block=32,
+                     n_buckets=2, seed=3)
+    p1 = build_pool(graph, cfg)
+    p2 = build_pool(graph, cfg)
+    assert p1.buckets == p2.buckets
+    for a, b in zip(p1.subgraphs, p2.subgraphs):
+        assert a.n_valid == b.n_valid
+        assert np.array_equal(a.prop.row_ids, b.prop.row_ids)
+        assert np.array_equal(a.prop.col_ids, b.prop.col_ids)
+        assert np.allclose(a.prop.blocks, b.prop.blocks)
+        assert np.array_equal(a.features, b.features)
+        assert np.array_equal(a.train_mask, b.train_mask)
+
+
+def test_random_walk_deterministic(graph):
+    s1 = random_walk_subgraph(graph, 50, 3, np.random.default_rng(7))
+    s2 = random_walk_subgraph(graph, 50, 3, np.random.default_rng(7))
+    assert s1.n == s2.n
+    assert np.array_equal(s1.adj.col, s2.adj.col)
+    # symmetric induced subgraph
+    d = s1.adj.to_dense()
+    assert np.allclose(d, d.T)
+
+
+def test_bucket_count_bounded(graph):
+    for nb in (1, 2, 3):
+        pool = build_pool(graph, PoolConfig(
+            n_subgraphs=8, roots=50, walk_length=3, n_buckets=nb, block=32))
+        assert len(pool.buckets) <= nb
+        shapes = {(s.prop.n_row_blocks, s.prop.s_total)
+                  for s in pool.subgraphs}
+        assert len(shapes) <= nb
+        for s in pool.subgraphs:
+            b = pool.buckets[s.bucket_id]
+            # padded exactly to the bucket shape, transpose included
+            assert s.prop.n_row_blocks == b.n_blocks
+            assert s.prop.s_total == b.s_pad
+            assert s.prop_t.n_row_blocks == b.n_blocks
+            assert s.prop_t.s_total == b.s_pad
+            assert s.features.shape[0] == b.n_blocks * 32
+
+
+def test_ldg_partition_covers_disjoint(graph):
+    parts = ldg_partition(graph.adj, 4, np.random.default_rng(0))
+    cat = np.concatenate(parts)
+    assert np.array_equal(np.sort(cat), np.arange(graph.n))
+    cap = -(-graph.n // 4)
+    assert max(len(p) for p in parts) <= cap
+
+
+# ------------------------------- plan pool --------------------------------
+
+def test_plan_cache_isolation(graph):
+    """Refreshing subgraph A's plans must leave B's untouched."""
+    pool = build_pool(graph, PoolConfig(n_subgraphs=2, method="ldg",
+                                        block=32, n_buckets=1))
+    names, dims = ["gcn/spmm0"], {"gcn/spmm0": 16}
+    pp = PlanCachePool(pool, names, dims, budget_frac=0.3, refresh_every=1)
+    a, b = pool.subgraphs
+    plans_a = pp.plans_for(a)
+    plans_b = pp.plans_for(b)
+    assert pp.stats.cold == 2
+    b_sel = np.asarray(plans_b["gcn/spmm0"].sel).copy()
+    a_active0 = plans_a["gcn/spmm0"].n_active
+    b_active0 = plans_b["gcn/spmm0"].n_active
+
+    rng = np.random.default_rng(0)
+    pp.record_norms(a.sub_id, {"gcn/spmm0": rng.random(a.prop.n_rows)})
+    plans_a2 = pp.plans_for(a)          # clock expired + norms -> refresh
+    assert pp.stats.refreshes == 1
+    assert plans_a2["gcn/spmm0"].n_active < a_active0   # now sampled
+    # B's cached plan is bit-identical
+    b_plan = pp.caches[b.sub_id].ops["gcn/spmm0"].plan
+    assert np.array_equal(np.asarray(b_plan.sel), b_sel)
+    assert b_plan.n_active == b_active0
+
+
+def test_plan_lengths_fixed_per_bucket(graph):
+    """All plans of a bucket share one static s_pad across refreshes."""
+    pool = build_pool(graph, PoolConfig(n_subgraphs=4, method="ldg",
+                                        block=32, n_buckets=1))
+    names, dims = ["gcn/spmm0"], {"gcn/spmm0": 16}
+    pp = PlanCachePool(pool, names, dims, budget_frac=0.3, refresh_every=1)
+    rng = np.random.default_rng(1)
+    pads = set()
+    for sub in pool.subgraphs:
+        p = pp.plans_for(sub)["gcn/spmm0"]
+        pads.add(p.s_pad)
+        pp.record_norms(sub.sub_id,
+                        {"gcn/spmm0": rng.random(sub.prop.n_rows)})
+        p2 = pp.plans_for(sub)["gcn/spmm0"]     # refreshed
+        pads.add(p2.s_pad)
+    assert pads == {pool.buckets[0].plan_pad}
+
+
+# ---------------------------- training loops ------------------------------
+
+def test_minibatch_matches_fullbatch_loss(graph):
+    """With a single whole-graph partition and RSC off, the minibatch loop
+    reproduces the full-batch loss trajectory (shared step builders)."""
+    common = dict(model="gcn", n_layers=2, hidden=32, epochs=8, block=32,
+                  dropout=0.0, rsc=False, seed=0)
+    fb = GNNTrainer(TrainConfig(**common), graph).train(eval_every=8)
+    mb = MinibatchTrainer(
+        MinibatchConfig(method="ldg", n_subgraphs=1, n_buckets=1,
+                        prefetch=False, **common), graph).train(eval_every=8)
+    np.testing.assert_allclose(mb["history"]["loss"],
+                               fb["history"]["loss"], rtol=2e-4, atol=2e-5)
+
+
+def test_minibatch_rsc_trains_with_bounded_compiles(graph):
+    cfg = MinibatchConfig(model="gcn", n_layers=2, hidden=32, epochs=6,
+                          block=32, dropout=0.2, rsc=True, budget=0.3,
+                          refresh_every=2, n_subgraphs=6, roots=60,
+                          walk_length=3, n_buckets=2, seed=1)
+    tr = MinibatchTrainer(cfg, graph)
+    res = tr.train(eval_every=3)
+    assert np.isfinite(res["history"]["loss"]).all()
+    for name, n in res["compiles"].items():
+        if n is not None:
+            assert n <= res["n_buckets"], (name, n)
+    assert res["plan_hit_rate"] > 0
+    assert res["flops_fraction"] < 1.0
+    # switch-back: tail of the run is exact
+    assert res["history"]["mode"][-1] == "exact"
+    assert res["history"]["mode"][0] == "rsc"
+
+
+def test_prefetch_matches_synchronous(graph):
+    """The double-buffered loader changes timing, never results."""
+    common = dict(model="gcn", n_layers=2, hidden=32, epochs=4, block=32,
+                  dropout=0.2, rsc=False, seed=2, method="ldg",
+                  n_subgraphs=4, n_buckets=2)
+    r_on = MinibatchTrainer(MinibatchConfig(prefetch=True, **common),
+                            graph).train(eval_every=4)
+    r_off = MinibatchTrainer(MinibatchConfig(prefetch=False, **common),
+                             graph).train(eval_every=4)
+    np.testing.assert_allclose(r_on["history"]["loss"],
+                               r_off["history"]["loss"], rtol=1e-6)
+    assert r_on["history"]["sub_id"] == r_off["history"]["sub_id"]
+
+
+def test_prefetcher_yields_schedule_order(graph):
+    pool = build_pool(graph, PoolConfig(n_subgraphs=4, method="ldg",
+                                        block=32, n_buckets=2))
+    sched = [2, 0, 3, 1, 2]
+    seen = [sid for sid, ops in Prefetcher(pool, sched, depth=2)]
+    assert seen == sched
+
+
+def test_graphsage_minibatch_runs(graph):
+    cfg = MinibatchConfig(model="graphsage", n_layers=2, hidden=24,
+                          epochs=3, block=32, rsc=True, budget=0.3,
+                          refresh_every=1, n_subgraphs=4, roots=60,
+                          walk_length=2, n_buckets=2, seed=0)
+    res = MinibatchTrainer(cfg, graph).train(eval_every=3)
+    assert np.isfinite(res["history"]["loss"]).all()

@@ -1,7 +1,8 @@
 """Eq. 2–3 sampling, top-k, Algorithm 1 greedy allocator (+DP certificate)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import given, settings, st
 
 from repro.core.allocator import (LayerSpec, dp_allocate, greedy_allocate,
                                   uniform_allocate)

@@ -1,9 +1,8 @@
 """CSR / BlockCOO / topology unit + property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from conftest import random_csr
+from conftest import given, random_csr, settings, st
 from repro.sparse.bcoo import bcoo_to_dense, csr_to_bcoo, \
     degree_sort_permutation
 from repro.sparse.csr import CSR
