@@ -16,8 +16,7 @@ import numpy as np
 from benchmarks.common import emit, timeit
 from repro.core import (LayerSpec, PlanCache, build_plan, full_plan,
                         greedy_allocate, uniform_allocate)
-from repro.core.plan import SamplePlan
-from repro.core.rsc_spmm import spmm_apply
+from repro.core.rsc_spmm import exact_plan, spmm_apply
 from repro.graphs.datasets import DATASETS, load_dataset
 from repro.models.gnn.common import build_operands
 from repro.train.loop import GNNTrainer, TrainConfig
@@ -35,9 +34,7 @@ def fig1_profile(scale=0.003) -> list[str]:
                         .standard_normal((ops.a.n_cols, d)), jnp.float32)
         w = jnp.asarray(np.random.default_rng(1)
                         .standard_normal((d, d)), jnp.float32)
-        plan = SamplePlan(sel=jnp.arange(ops.a.s_total, dtype=jnp.int32),
-                          row_ids=ops.a.row_ids, col_ids=ops.a.col_ids,
-                          s_pad=ops.a.s_total, n_active=ops.a.s_total)
+        plan = exact_plan(ops.a)
         spmm = jax.jit(lambda pl, hh: spmm_apply(
             ops.a.blocks, pl, hh, ops.a.n_row_blocks, ops.a.bm, ops.a.bk))
         matmul = jax.jit(lambda hh: hh @ w)

@@ -1,0 +1,197 @@
+"""SpMM engine microbenchmark → repo-root ``BENCH_spmm.json``.
+
+Op-level timings for the three SpMM schedules on the current host:
+
+* ``old_segment_sum`` — the schedule this PR replaced (materializes the
+  full ``(s_pad, bm, d)`` partial-product tensor; survives as the test
+  oracle ``kernels.ref.bcoo_spmm_ref``),
+* ``stream`` — the chunked-``lax.scan`` streaming fallback, at the
+  autotuned chunk,
+* ``stream_sampled`` — the same engine under a 25 %-of-tiles sampled plan
+  (the paper's FLOPs knob: exact vs sampled on identical code),
+
+plus a numeric-parity record for the row-segmented Pallas kernel in
+interpret mode (fused epilogue enabled, tiny shapes — interpret mode is
+far too slow to time meaningfully) and an autotuner cache-hit record
+(second query for the same signature must not re-sweep).
+
+    PYTHONPATH=src python -m benchmarks.spmm_bench [--tiny] [--out PATH]
+
+JSON schema (asserted by the CI smoke job)::
+
+    {"schema": "rsc/bench_spmm/v1",
+     "backend": "<jax default backend>",
+     "results": [{"name", "s_pad", "d", "bm", "bk", "us_per_call",
+                  "speedup_vs_old", "chunk"}...],
+     "kernel_parity": {"max_abs_err", "tol", "epilogue", "pass"},
+     "autotune": {"signature", "config", "sweeps", "second_query_hit"}}
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timeit
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def _timeit(fn, *args, iters=3):
+    """µs per call — shared median-based timing from benchmarks.common."""
+    return timeit(fn, *args, warmup=1, iters=iters) * 1e6
+
+
+def _operands(rng, s_pad, n_rb, n_cb, d, bm, bk):
+    rows = np.sort(rng.integers(0, n_rb, s_pad)).astype(np.int32)
+    cols = rng.integers(0, n_cb, s_pad).astype(np.int32)
+    blocks = np.concatenate(
+        [rng.standard_normal((s_pad, bm, bk)),
+         np.zeros((1, bm, bk))]).astype(np.float32)
+    sel = np.arange(s_pad, dtype=np.int32)
+    h = rng.standard_normal((n_cb * bk, d)).astype(np.float32)
+    return tuple(jnp.asarray(x) for x in (blocks, sel, rows, cols, h))
+
+
+def bench_schedules(shapes, iters) -> list[dict]:
+    from repro.core.rsc_spmm import spmm_stream
+    from repro.kernels import autotune
+    from repro.kernels.ref import bcoo_spmm_ref
+
+    rng = np.random.default_rng(0)
+    results = []
+    for s_pad, n_rb, n_cb, d, bm, bk in shapes:
+        blocks, sel, rows, cols, h = _operands(
+            rng, s_pad, n_rb, n_cb, d, bm, bk)
+        old = jax.jit(lambda b, s, r, c, hh: bcoo_spmm_ref(
+            b, s, r, c, hh, n_row_blocks=n_rb, bm=bm, bk=bk))
+        us_old = _timeit(old, blocks, sel, rows, cols, h, iters=iters)
+        results.append(dict(name="old_segment_sum", s_pad=s_pad, d=d,
+                            bm=bm, bk=bk, us_per_call=us_old,
+                            speedup_vs_old=1.0, chunk=None))
+
+        cfg = autotune.get_or_tune(
+            "jnp", bm=bm, bk=bk, d=d, s_pad=s_pad,
+            n_row_blocks=n_rb, n_col_blocks=n_cb)
+        new = jax.jit(lambda b, s, r, c, hh: spmm_stream(
+            b, s, r, c, hh, n_row_blocks=n_rb, bm=bm, bk=bk,
+            chunk=cfg.chunk))
+        us_new = _timeit(new, blocks, sel, rows, cols, h, iters=iters)
+        results.append(dict(name="stream", s_pad=s_pad, d=d, bm=bm, bk=bk,
+                            us_per_call=us_new,
+                            speedup_vs_old=us_old / us_new,
+                            chunk=cfg.chunk))
+
+        # Sampled plan: keep the first 25% of tiles (rows stay sorted) —
+        # identical engine, shorter id list (the paper's FLOPs knob).
+        keep = max(1, s_pad // 4)
+        samp = jax.jit(lambda b, s, r, c, hh: spmm_stream(
+            b, s, r, c, hh, n_row_blocks=n_rb, bm=bm, bk=bk,
+            chunk=cfg.chunk))
+        us_samp = _timeit(samp, blocks, sel[:keep], rows[:keep],
+                          cols[:keep], h, iters=iters)
+        results.append(dict(name="stream_sampled_25", s_pad=keep, d=d,
+                            bm=bm, bk=bk, us_per_call=us_samp,
+                            speedup_vs_old=us_old / us_samp,
+                            chunk=cfg.chunk))
+    return results
+
+
+def kernel_parity(tol=1e-5) -> dict:
+    """Row-segmented Pallas kernel (interpret) vs the segment_sum oracle,
+    fused epilogue ENABLED."""
+    from repro.kernels.bcoo_spmm import bcoo_spmm
+    from repro.kernels.ref import bcoo_spmm_ref
+
+    rng = np.random.default_rng(1)
+    bm = bk = 8
+    s_pad, n_rb, n_cb, d = 48, 6, 6, 16
+    blocks, sel, rows, cols, h = _operands(
+        rng, s_pad, n_rb, n_cb, d, bm, bk)
+    from repro.sparse.bcoo import host_row_ptr
+    row_ptr = jnp.asarray(host_row_ptr(np.asarray(rows), n_rb))
+    bias = jnp.asarray(rng.standard_normal(d).astype(np.float32))
+    resid = jnp.asarray(
+        rng.standard_normal((n_rb * bm, d)).astype(np.float32))
+    out = bcoo_spmm(blocks, sel, rows, cols, h, n_row_blocks=n_rb,
+                    bm=bm, bk=bk, bd=d, row_ptr=row_ptr, bias=bias,
+                    residual=resid, relu=True, interpret=True)
+    base = bcoo_spmm_ref(blocks, sel, rows, cols, h, n_row_blocks=n_rb,
+                         bm=bm, bk=bk)
+    ref = jnp.maximum(base + bias[None, :] + resid, 0.0)
+    err = float(jnp.max(jnp.abs(out - ref)))
+    return {"max_abs_err": err, "tol": tol, "epilogue": True,
+            "pass": err <= tol}
+
+
+def autotune_cache_demo() -> dict:
+    """Tune one signature twice: the second query must hit, not re-sweep."""
+    from repro.kernels import autotune
+
+    kw = dict(bm=16, bk=16, d=32, s_pad=96, n_row_blocks=8, n_col_blocks=8)
+    autotune.get_or_tune("jnp", **kw)
+    sweeps_after_first = autotune.get_cache().stats.sweeps
+    cfg = autotune.get_or_tune("jnp", **kw)
+    sweeps_after_second = autotune.get_cache().stats.sweeps
+    return {
+        "signature": autotune.signature("jnp", **kw),
+        "config": {"bd": cfg.bd, "chunk": cfg.chunk, "source": cfg.source},
+        "sweeps": sweeps_after_second,
+        "second_query_hit": sweeps_after_second == sweeps_after_first,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke shapes (seconds, not minutes)")
+    ap.add_argument("--out", default=str(ROOT / "BENCH_spmm.json"))
+    ap.add_argument("--cache", default=None,
+                    help="autotune cache file (default: fresh temp file so "
+                         "runs are self-contained)")
+    args = ap.parse_args()
+
+    from repro.kernels import autotune
+    if args.cache:
+        autotune.reset(args.cache)
+    else:
+        import tempfile
+        autotune.reset(Path(tempfile.mkdtemp()) / "autotune.json")
+
+    if args.tiny:
+        shapes = [(96, 8, 8, 16, 16, 16), (128, 8, 8, 32, 16, 16)]
+        iters = 2
+    else:
+        # bm=bk=128 MXU-shaped tiles; s_pad ≥ 512 is the acceptance band
+        # for the streaming-vs-segment_sum speedup.
+        shapes = [(128, 16, 16, 64, 128, 128),
+                  (512, 32, 32, 64, 128, 128),
+                  (1024, 64, 64, 128, 128, 128)]
+        iters = 3
+
+    report = {
+        "schema": "rsc/bench_spmm/v1",
+        "backend": jax.default_backend(),
+        "tiny": args.tiny,
+        "results": bench_schedules(shapes, iters),
+        "kernel_parity": kernel_parity(),
+        "autotune": autotune_cache_demo(),
+    }
+    Path(args.out).write_text(json.dumps(report, indent=1))
+    for r in report["results"]:
+        print(f"{r['name']},s{r['s_pad']},d{r['d']}: "
+              f"{r['us_per_call']:.0f}us  "
+              f"speedup_vs_old={r['speedup_vs_old']:.2f}x")
+    print(f"kernel_parity: err={report['kernel_parity']['max_abs_err']:.2e} "
+          f"pass={report['kernel_parity']['pass']}")
+    print(f"autotune second_query_hit="
+          f"{report['autotune']['second_query_hit']}")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -17,7 +17,7 @@ from functools import partial
 import jax
 import numpy as np
 
-from repro.sparse.bcoo import BlockMeta
+from repro.sparse.bcoo import BlockMeta, host_row_ptr
 
 
 def _ceil_to(x: int, m: int) -> int:
@@ -26,7 +26,7 @@ def _ceil_to(x: int, m: int) -> int:
 
 @partial(
     jax.tree_util.register_dataclass,
-    data_fields=["sel", "row_ids", "col_ids", "n_active"],
+    data_fields=["sel", "row_ids", "col_ids", "n_active", "row_ptr"],
     meta_fields=["s_pad"],
 )
 @dataclasses.dataclass(frozen=True)
@@ -36,6 +36,13 @@ class SamplePlan:
     ``n_active`` is host bookkeeping but registered as pytree DATA, not
     static metadata: plans with equal ``s_pad`` and different allocations
     must hit the same jit cache entry (one compile per shape bucket).
+
+    ``row_ptr`` is the CSR-of-tiles pointer array of the sorted id lists:
+    tiles of output row block ``r`` occupy ``sel[row_ptr[r]:row_ptr[r+1]]``.
+    It drives the row-segmented Pallas kernel (one grid step per output
+    tile); the streaming jnp fallback scans the flat id lists and ignores
+    it. Plans built before the field existed may carry ``None``; the
+    kernel recovers it on device via :func:`plan_row_ptr`.
     """
 
     sel: jax.Array      # (s_pad,) int32 — tile index into blocks; sentinel = s_total
@@ -43,10 +50,22 @@ class SamplePlan:
     col_ids: jax.Array  # (s_pad,) int32
     n_active: int       # real (non-sentinel) tiles — bookkeeping/FLOPs
     s_pad: int          # static grid length
+    row_ptr: jax.Array | None = None  # (n_row_blocks + 1,) int32 or None
 
     def flops(self, bm: int, bk: int, d: int) -> int:
         """FLOPs of SpMM under this plan (Eq. 4b cost, block units)."""
         return 2 * self.n_active * bm * bk * d
+
+
+def plan_row_ptr(row_ids: jax.Array, n_row_blocks: int) -> jax.Array:
+    """Recover the tiles-per-row-block pointer array from sorted row ids.
+
+    Works under jit (device searchsorted); ``build_plan`` precomputes the
+    same thing on host so hot paths never pay for it.
+    """
+    return jax.numpy.searchsorted(
+        row_ids, jax.numpy.arange(n_row_blocks + 1, dtype=row_ids.dtype),
+        side="left").astype(jax.numpy.int32)
 
 
 def build_plan(
@@ -94,12 +113,14 @@ def build_plan(
         rows = np.concatenate([rows, np.full(pad, last_row, np.int32)])
         cols = np.concatenate([cols, np.zeros(pad, np.int32)])
 
+    row_ptr = host_row_ptr(rows, n_row_blocks)
     return SamplePlan(
         sel=jax.numpy.asarray(sel),
         row_ids=jax.numpy.asarray(rows),
         col_ids=jax.numpy.asarray(cols),
         s_pad=s_pad,
         n_active=int(np.count_nonzero(keep_tile)),
+        row_ptr=jax.numpy.asarray(row_ptr),
     )
 
 

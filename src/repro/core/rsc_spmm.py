@@ -4,8 +4,21 @@ Forward:  H_pre = SpMM(Ã, J)                       — exact (Prop. 3.1 require
 Backward: ∇J    = SpMM_sampled(Ãᵀ, ∇H_pre; plan)   — only the plan's tiles
 
 Both directions run the same block-COO apply (`spmm_apply`), either the
-pure-JAX path (segment_sum — CPU training / oracle) or the Pallas kernel
-(`repro.kernels.ops.bcoo_spmm`) selected by ``backend``.
+STREAMING pure-JAX path (`spmm_stream`, a chunked ``lax.scan`` over the tile
+list — CPU training / oracle) or the row-segmented Pallas kernel
+(`repro.kernels.ops.bcoo_spmm`) selected by ``backend``. The old
+``segment_sum`` schedule survives only as the test oracle
+(`repro.kernels.ref.bcoo_spmm_ref`): it materializes the full
+``(s_pad, bm, d)`` partial-product tensor, which blows the cache for every
+sampled plan size, while ``spmm_stream`` keeps the live intermediate at
+``(chunk, bm, d)`` and scatter-adds into a donated accumulator.
+
+Fused epilogue: both paths accept ``bias`` / ``residual`` / ``relu`` and
+apply ``out = relu(spmm + bias + residual)`` in the same kernel launch
+(Pallas) or fused XLA computation (jnp) — the custom VJPs below propagate
+gradients through the epilogue (ReLU mask from the exact forward output,
+``∂bias = Σ_rows``, ``∂residual = masked cotangent``) before the sampled
+backward SpMM.
 
 Bias note (paper §3.1.2): the approximation sits strictly behind the ReLU
 mask computed from exact pre-activations, so gradients stay unbiased when
@@ -21,7 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.plan import SamplePlan
-from repro.sparse.bcoo import BlockCOO
+from repro.sparse.bcoo import BlockCOO, host_row_ptr
 
 
 def _zero_cot(tree):
@@ -33,6 +46,61 @@ def _zero_cot(tree):
     return jax.tree.map(z, tree)
 
 
+def exact_plan(a: BlockCOO) -> SamplePlan:
+    """The identity plan of a BlockCOO: its own sorted id lists."""
+    return SamplePlan(sel=jnp.arange(a.s_total, dtype=jnp.int32),
+                      row_ids=a.row_ids, col_ids=a.col_ids,
+                      s_pad=a.s_total, n_active=a.s_total,
+                      row_ptr=a.row_ptr)
+
+
+def spmm_stream(
+    blocks: jax.Array,      # (S+1, bm, bk) tiles incl. trailing zero sentinel
+    sel: jax.Array,         # (s_pad,) int32
+    row_ids: jax.Array,     # (s_pad,) int32, sorted ascending
+    col_ids: jax.Array,     # (s_pad,) int32
+    h: jax.Array,           # (n_cols, d)
+    *,
+    n_row_blocks: int,
+    bm: int,
+    bk: int,
+    chunk: int = 32,
+) -> jax.Array:
+    """Streaming jnp SpMM: ``lax.scan`` over ``chunk``-tile slices.
+
+    Each scan step gathers ``(chunk, bm, bk)`` tiles and ``(chunk, bk, d)``
+    dense slabs, contracts them, and scatter-adds into the carried
+    ``(n_row_blocks, bm, d)`` accumulator — the ``(s_pad, bm, d)`` tensor of
+    the old schedule is never materialized. Tail padding points at the zero
+    sentinel tile with row index ``n_row_blocks`` (dropped by the scatter).
+    """
+    d = h.shape[-1]
+    s_pad = sel.shape[0]
+    chunk = max(1, min(chunk, s_pad))
+    hb = h.reshape(-1, bk, d)
+    n_chunks = -(-s_pad // chunk)
+    pad = n_chunks * chunk - s_pad
+    if pad:
+        sentinel = blocks.shape[0] - 1
+        sel = jnp.concatenate(
+            [sel, jnp.full((pad,), sentinel, sel.dtype)])
+        row_ids = jnp.concatenate(
+            [row_ids, jnp.full((pad,), n_row_blocks, row_ids.dtype)])
+        col_ids = jnp.concatenate([col_ids, jnp.zeros((pad,), col_ids.dtype)])
+
+    def step(acc, xs):
+        sl, rw, cl = xs
+        part = jnp.einsum("sij,sjd->sid", blocks[sl], hb[cl],
+                          preferred_element_type=jnp.float32)
+        return acc.at[rw].add(part, mode="drop"), None
+
+    acc = jnp.zeros((n_row_blocks, bm, d), jnp.float32)
+    acc, _ = jax.lax.scan(step, acc, (sel.reshape(n_chunks, chunk),
+                                      row_ids.reshape(n_chunks, chunk),
+                                      col_ids.reshape(n_chunks, chunk)))
+    return acc.reshape(n_row_blocks * bm, d).astype(h.dtype)
+
+
 def spmm_apply(
     blocks: jax.Array,      # (S+1, bm, bk) tiles incl. sentinel
     plan: SamplePlan,
@@ -41,84 +109,137 @@ def spmm_apply(
     bm: int,
     bk: int,
     backend: str = "jnp",
+    *,
+    bias: jax.Array | None = None,
+    residual: jax.Array | None = None,
+    relu: bool = False,
+    chunk: int | None = None,
 ) -> jax.Array:
-    """out[r] = Σ_{tiles (r,c) in plan} blocks[sel] @ h[c·bk:(c+1)·bk]."""
+    """out[r] = epilogue(Σ_{tiles (r,c) in plan} blocks[sel] @ h[c·bk:...]).
+
+    Epilogue contract (identical on every backend):
+    ``out = max(acc + bias + residual, 0) if relu else acc + bias + residual``.
+    Tuning knobs (Pallas ``bd``, streaming ``chunk``) resolve through
+    :mod:`repro.kernels.autotune` when not given explicitly.
+    """
     if backend == "pallas" or backend == "pallas_interpret":
         from repro.kernels import ops as kops
         return kops.bcoo_spmm(
             blocks, plan.sel, plan.row_ids, plan.col_ids, h,
             n_row_blocks=n_row_blocks, bm=bm, bk=bk,
+            row_ptr=plan.row_ptr, bias=bias, residual=residual, relu=relu,
             interpret=(backend == "pallas_interpret"),
         )
-    d = h.shape[-1]
-    hb = h.reshape(-1, bk, d)
-    gathered = hb[plan.col_ids]          # (s_pad, bk, d)
-    tiles = blocks[plan.sel]             # (s_pad, bm, bk)
-    part = jnp.einsum("sij,sjd->sid", tiles, gathered,
-                      preferred_element_type=jnp.float32)
-    out = jax.ops.segment_sum(part, plan.row_ids,
-                              num_segments=n_row_blocks)
-    return out.reshape(n_row_blocks * bm, d).astype(h.dtype)
+    if chunk is None:
+        from repro.kernels import autotune
+        chunk = autotune.lookup(autotune.signature(
+            "jnp", bm=bm, bk=bk, d=h.shape[-1], s_pad=plan.s_pad,
+            n_row_blocks=n_row_blocks,
+            n_col_blocks=h.shape[0] // bk)).chunk
+    out = spmm_stream(blocks, plan.sel, plan.row_ids, plan.col_ids, h,
+                      n_row_blocks=n_row_blocks, bm=bm, bk=bk, chunk=chunk)
+    if bias is not None:
+        out = out + bias
+    if residual is not None:
+        out = out + residual
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _exact_fwd(a: BlockCOO, h: jax.Array, backend: str,
+               bias=None, residual=None, relu=False) -> jax.Array:
+    return spmm_apply(a.blocks, exact_plan(a), h, a.n_row_blocks, a.bm, a.bk,
+                      backend, bias=bias, residual=residual, relu=relu)
+
+
+# cfg = (backend, relu, has_bias, has_residual) — static dispatch tuple.
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _rsc_spmm(cfg, a, at, bwd_plan, h, bias, residual):
+    backend, relu, _, _ = cfg
+    return _exact_fwd(a, h, backend, bias, residual, relu)
+
+
+def _rsc_fwd(cfg, a, at, bwd_plan, h, bias, residual):
+    backend, relu, _, _ = cfg
+    out = _exact_fwd(a, h, backend, bias, residual, relu)
+    # relu'(x) = 1 ⟺ x > 0 ⟺ max(x, 0) > 0: the mask recomputes exactly
+    # from the fused output, so the pre-activation never needs saving.
+    mask = (out > 0) if relu else None
+    return out, (a, at, bwd_plan, mask)
+
+
+def _rsc_bwd(cfg, res, g):
+    backend, relu, has_bias, has_residual = cfg
+    a, at, bwd_plan, mask = res
+    gp = jnp.where(mask, g, 0) if relu else g
+    # ∇J = SpMM_sampled(Ãᵀ, ∇H_pre): only the tiles the plan kept.
+    dh = spmm_apply(at.blocks, bwd_plan, gp, at.n_row_blocks, at.bm, at.bk,
+                    backend)
+    dbias = jnp.sum(gp, axis=0) if has_bias else None
+    dres = gp if has_residual else None
+    return (_zero_cot(a), _zero_cot(at), _zero_cot(bwd_plan), dh, dbias, dres)
+
+
+_rsc_spmm.defvjp(_rsc_fwd, _rsc_bwd)
+
+
 def rsc_spmm(a: BlockCOO, at: BlockCOO, bwd_plan: SamplePlan,
-             h: jax.Array, backend: str = "jnp") -> jax.Array:
-    """SpMM(a, h) with sampled VJP through ``at`` under ``bwd_plan``.
+             h: jax.Array, backend: str = "jnp", *,
+             bias: jax.Array | None = None,
+             residual: jax.Array | None = None,
+             relu: bool = False) -> jax.Array:
+    """SpMM(a, h) (+ fused epilogue) with sampled VJP through ``at``.
 
     ``a`` carries its own full plan implicitly (its sorted id lists are the
     exact plan); ``at`` is the pre-transposed operand for the backward op.
+    The epilogue is differentiated exactly; only the SpMM against ``at``
+    is sampled (under ``bwd_plan``).
     """
-    return _exact_fwd(a, h, backend)
+    cfg = (backend, relu, bias is not None, residual is not None)
+    return _rsc_spmm(cfg, a, at, bwd_plan, h, bias, residual)
 
 
-def _exact_fwd(a: BlockCOO, h: jax.Array, backend: str) -> jax.Array:
-    plan = SamplePlan(sel=jnp.arange(a.s_total, dtype=jnp.int32),
-                      row_ids=a.row_ids, col_ids=a.col_ids,
-                      s_pad=a.s_total, n_active=a.s_total)
-    return spmm_apply(a.blocks, plan, h, a.n_row_blocks, a.bm, a.bk, backend)
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _exact_spmm(cfg, a, at, h, bias, residual):
+    backend, relu, _, _ = cfg
+    return _exact_fwd(a, h, backend, bias, residual, relu)
 
 
-def _fwd(a, at, bwd_plan, h, backend):
-    out = _exact_fwd(a, h, backend)
-    return out, (a, at, bwd_plan)
+def _eb_fwd(cfg, a, at, h, bias, residual):
+    backend, relu, _, _ = cfg
+    out = _exact_fwd(a, h, backend, bias, residual, relu)
+    mask = (out > 0) if relu else None
+    return out, (a, at, mask)
 
 
-def _bwd(backend, res, g):
-    a, at, bwd_plan = res
-    # ∇J = SpMM_sampled(Ãᵀ, ∇H_pre): only the tiles the plan kept.
-    dh = spmm_apply(at.blocks, bwd_plan, g, at.n_row_blocks, at.bm, at.bk,
-                    backend)
-    return (_zero_cot(a), _zero_cot(at), _zero_cot(bwd_plan), dh)
+def _eb_bwd(cfg, res, g):
+    backend, relu, has_bias, has_residual = cfg
+    a, at, mask = res
+    gp = jnp.where(mask, g, 0) if relu else g
+    dh = _exact_fwd(at, gp, backend)
+    dbias = jnp.sum(gp, axis=0) if has_bias else None
+    dres = gp if has_residual else None
+    return (_zero_cot(a), _zero_cot(at), dh, dbias, dres)
 
 
-rsc_spmm.defvjp(_fwd, _bwd)
+_exact_spmm.defvjp(_eb_fwd, _eb_bwd)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(3,))
 def exact_spmm(a: BlockCOO, at: BlockCOO, h: jax.Array,
-               backend: str = "jnp") -> jax.Array:
-    """Exact SpMM with exact VJP — the no-RSC baseline.
+               backend: str = "jnp", *,
+               bias: jax.Array | None = None,
+               residual: jax.Array | None = None,
+               relu: bool = False) -> jax.Array:
+    """Exact SpMM (+ fused epilogue) with exact VJP — the no-RSC baseline.
 
     Implemented as a custom_vjp as well so forward/backward both route
     through the same block-COO apply (fair Table 2/3 comparisons).
     ``at`` must be the pre-transposed operand (built at setup time —
     transposition cannot happen under jit).
     """
-    return _exact_fwd(a, h, backend)
-
-
-def _eb_fwd(a, at, h, backend):
-    return _exact_fwd(a, h, backend), (a, at)
-
-
-def _eb_bwd(backend, res, g):
-    a, at = res
-    dh = _exact_fwd(at, g, backend)
-    return (_zero_cot(a), _zero_cot(at), dh)
-
-
-exact_spmm.defvjp(_eb_fwd, _eb_bwd)
+    cfg = (backend, relu, bias is not None, residual is not None)
+    return _exact_spmm(cfg, a, at, h, bias, residual)
 
 
 def transpose_bcoo(a: BlockCOO) -> BlockCOO:
@@ -137,4 +258,5 @@ def transpose_bcoo(a: BlockCOO) -> BlockCOO:
         n_rows=a.n_cols, n_cols=a.n_rows,
         n_row_blocks=a.n_col_blocks, n_col_blocks=a.n_row_blocks,
         s_total=a.s_total,
+        row_ptr=jnp.asarray(host_row_ptr(cols[order], a.n_col_blocks)),
     )

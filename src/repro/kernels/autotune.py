@@ -1,0 +1,271 @@
+"""Per-signature SpMM tile autotuner with a persisted JSON config cache.
+
+Qiu et al. (*Optimizing Sparse Matrix Multiplications for GNNs*) show the
+best SpMM tile shape is input-dependent; our CPU sweeps agree (the winning
+streaming ``chunk`` flips between 16 and 128 across operand shapes). This
+module owns that decision:
+
+* an operand **signature** buckets the dispatch-relevant statics —
+  ``(backend, bm, bk, d, s_pad, n_row_blocks)`` rounded to powers of two
+  plus a **density band** (``s_pad / (n_row_blocks · n_col_blocks)``
+  quantized to coarse bands) — so one sweep serves every operand in the
+  bucket (in particular: every subgraph of a minibatch shape bucket);
+* :func:`get_or_tune` sweeps the backend's tunables on synthetic operands
+  of the bucket's representative shape — ``chunk`` (tiles per scan step of
+  the streaming jnp fallback) and ``bd`` (dense column tile of the
+  row-segmented Pallas kernel) — and caches the winner;
+* :func:`lookup` is the zero-cost trace-time read consulted by
+  ``kernels.ops`` / ``core.rsc_spmm`` at dispatch: cached winner if the
+  signature was ever tuned (this process or a previous one, via the JSON
+  file), heuristic default otherwise. ``lookup`` NEVER sweeps, so cold
+  dispatch never stalls a jit trace.
+
+Cache file format (``RSC_AUTOTUNE_CACHE`` env var, default
+``~/.cache/repro-rsc/spmm_autotune.json``)::
+
+    {"version": 1,
+     "entries": {"<signature>": {"bd": 512, "chunk": 16, "us": 1234.5}}}
+
+``us`` records the winning candidate's measured microseconds per call
+(provenance only). Unknown keys are preserved on rewrite; writes are
+atomic (tmp file + rename).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from pathlib import Path
+
+import numpy as np
+
+CHUNK_CANDIDATES = (8, 16, 32, 64, 128)
+BD_CANDIDATES = (128, 256, 512)
+DEFAULT_CHUNK = 32
+DEFAULT_BD = 512
+# Sweep-time caps: candidates are timed at the bucket's representative
+# shape clipped to these, keeping any single sweep sub-second-ish on CPU
+# while preserving the relative ordering of tile configs. SWEEP_MAX_D
+# equals max(BD_CANDIDATES) so clipping d never removes a bd candidate
+# from the sweep space.
+SWEEP_MAX_S = 1024
+SWEEP_MAX_BLOCKS = 64
+SWEEP_MAX_D = 512
+
+
+@dataclasses.dataclass(frozen=True)
+class SpmmConfig:
+    bd: int       # dense column tile of the Pallas kernel
+    chunk: int    # tiles per scan step of the streaming jnp fallback
+    source: str = "default"   # "default" | "swept" | "cache"
+
+
+@dataclasses.dataclass
+class TuneStats:
+    lookups: int = 0
+    hits: int = 0        # lookups/get_or_tune served from the cache
+    defaults: int = 0    # lookups answered with the heuristic default
+    sweeps: int = 0      # actual timing sweeps run
+
+
+def _pow2_ceil(x: int) -> int:
+    return 1 << max(0, (int(x) - 1).bit_length())
+
+
+def _density_band(s_pad: int, n_row_blocks: int, n_col_blocks: int) -> str:
+    dens = s_pad / max(1, n_row_blocks * n_col_blocks)
+    for edge in (0.02, 0.05, 0.1, 0.25, 0.5, 1.0):
+        if dens <= edge:
+            return f"{edge:g}"
+    return "inf"
+
+
+def signature(backend: str, *, bm: int, bk: int, d: int, s_pad: int,
+              n_row_blocks: int, n_col_blocks: int) -> str:
+    """Bucket an operand's dispatch statics into a cache key."""
+    return (f"{backend}|bm{bm}|bk{bk}|d{_pow2_ceil(d)}|s{_pow2_ceil(s_pad)}"
+            f"|rb{_pow2_ceil(n_row_blocks)}"
+            f"|dens{_density_band(s_pad, n_row_blocks, n_col_blocks)}")
+
+
+class AutotuneCache:
+    """In-memory signature→config map, persisted to a JSON file."""
+
+    def __init__(self, path: str | os.PathLike | None = None):
+        if path is None:
+            path = os.environ.get(
+                "RSC_AUTOTUNE_CACHE",
+                str(Path.home() / ".cache" / "repro-rsc"
+                    / "spmm_autotune.json"))
+        self.path = Path(path)
+        self.entries: dict[str, dict] = {}
+        self.stats = TuneStats()
+        self._loaded = False
+
+    def _load(self) -> None:
+        if self._loaded:
+            return
+        self._loaded = True
+        try:
+            raw = json.loads(self.path.read_text())
+            if isinstance(raw, dict) and isinstance(raw.get("entries"), dict):
+                self.entries.update(raw["entries"])
+        except (OSError, ValueError):
+            pass
+
+    def save(self) -> None:
+        try:
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            tmp = self.path.with_suffix(".tmp")
+            tmp.write_text(json.dumps(
+                {"version": 1, "entries": self.entries},
+                indent=1, sort_keys=True))
+            tmp.replace(self.path)
+        except OSError:
+            pass  # read-only FS: stay in-memory only
+
+    def get(self, sig: str) -> SpmmConfig | None:
+        self._load()
+        e = self.entries.get(sig)
+        if e is None:
+            return None
+        return SpmmConfig(bd=int(e.get("bd", DEFAULT_BD)),
+                          chunk=int(e.get("chunk", DEFAULT_CHUNK)),
+                          source="cache")
+
+    def put(self, sig: str, cfg: SpmmConfig, us: float,
+            persist: bool = True) -> None:
+        self._load()
+        self.entries[sig] = {"bd": cfg.bd, "chunk": cfg.chunk,
+                             "us": round(us, 2)}
+        if persist:
+            self.save()
+
+
+_cache = AutotuneCache()
+
+
+def get_cache() -> AutotuneCache:
+    return _cache
+
+
+def reset(path: str | os.PathLike | None = None) -> AutotuneCache:
+    """Swap the process-wide cache (tests / benchmarks point it at a
+    scratch file)."""
+    global _cache
+    _cache = AutotuneCache(path)
+    return _cache
+
+
+def default_config(d: int) -> SpmmConfig:
+    bd = min(DEFAULT_BD, d)
+    if d % bd:
+        bd = d
+    return SpmmConfig(bd=bd, chunk=DEFAULT_CHUNK, source="default")
+
+
+def lookup(sig: str, d: int | None = None) -> SpmmConfig:
+    """Trace-time config read: cached winner or heuristic default.
+
+    Never sweeps — jit traces must not stall on a timing run.
+    """
+    _cache.stats.lookups += 1
+    cfg = _cache.get(sig)
+    if cfg is not None:
+        _cache.stats.hits += 1
+        return cfg
+    _cache.stats.defaults += 1
+    return default_config(d if d is not None else DEFAULT_BD)
+
+
+def _bench(fn, iters: int = 3) -> float:
+    import jax
+    jax.block_until_ready(fn())          # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def get_or_tune(backend: str, *, bm: int, bk: int, d: int, s_pad: int,
+                n_row_blocks: int, n_col_blocks: int,
+                persist: bool = True) -> SpmmConfig:
+    """Cached config for this signature, sweeping once on a miss.
+
+    The second query for the same ``(bucket shape, density band)``
+    signature — from any operand in the bucket, or any later process via
+    the JSON file — returns the cached winner without re-sweeping.
+    """
+    sig = signature(backend, bm=bm, bk=bk, d=d, s_pad=s_pad,
+                    n_row_blocks=n_row_blocks, n_col_blocks=n_col_blocks)
+    cfg = _cache.get(sig)
+    if cfg is not None:
+        _cache.stats.hits += 1
+        return cfg
+    cfg, us = _sweep(backend, bm=bm, bk=bk, d=d, s_pad=s_pad,
+                     n_row_blocks=n_row_blocks, n_col_blocks=n_col_blocks)
+    _cache.stats.sweeps += 1
+    _cache.put(sig, cfg, us, persist=persist)
+    return cfg
+
+
+def _sweep(backend: str, *, bm: int, bk: int, d: int, s_pad: int,
+           n_row_blocks: int, n_col_blocks: int) -> tuple[SpmmConfig, float]:
+    """Time each candidate on synthetic operands of the bucket shape."""
+    import jax.numpy as jnp
+
+    from repro.core.rsc_spmm import spmm_stream
+
+    # Representative (clipped) shapes — candidates keep their relative
+    # ordering; absolute times are only provenance.
+    s_rep = min(_pow2_ceil(s_pad), SWEEP_MAX_S)
+    rb_rep = min(_pow2_ceil(n_row_blocks), SWEEP_MAX_BLOCKS)
+    cb_rep = min(_pow2_ceil(n_col_blocks), SWEEP_MAX_BLOCKS)
+    d_rep = d if d <= SWEEP_MAX_D else SWEEP_MAX_D
+
+    rng = np.random.default_rng(0)
+    blocks = jnp.asarray(
+        np.concatenate([rng.standard_normal((s_rep, bm, bk)),
+                        np.zeros((1, bm, bk))]).astype(np.float32))
+    rows = jnp.asarray(np.sort(rng.integers(0, rb_rep, s_rep))
+                       .astype(np.int32))
+    cols = jnp.asarray(rng.integers(0, cb_rep, s_rep).astype(np.int32))
+    sel = jnp.asarray(np.arange(s_rep, dtype=np.int32))
+    h = jnp.asarray(rng.standard_normal((cb_rep * bk, d_rep))
+                    .astype(np.float32))
+
+    best: tuple[float, SpmmConfig] | None = None
+    if backend == "jnp":
+        import functools
+
+        import jax
+        for chunk in CHUNK_CANDIDATES:
+            # Operands must be ARGUMENTS of the jitted fn (a zero-arg jit
+            # would let XLA constant-fold the sweep away).
+            jitted = jax.jit(functools.partial(
+                spmm_stream, n_row_blocks=rb_rep, bm=bm, bk=bk,
+                chunk=chunk))
+            fn = lambda f=jitted: f(blocks, sel, rows, cols, h)  # noqa: E731
+            us = _bench(fn) * 1e6
+            cfg = SpmmConfig(bd=default_config(d).bd, chunk=chunk,
+                             source="swept")
+            if best is None or us < best[0]:
+                best = (us, cfg)
+    else:
+        from repro.kernels import ops as kops
+        from repro.sparse.bcoo import host_row_ptr
+        interpret = backend == "pallas_interpret" or not kops.on_tpu()
+        rptr = jnp.asarray(host_row_ptr(np.asarray(rows), rb_rep))
+        cands = [bd for bd in BD_CANDIDATES if bd <= d_rep and
+                 d_rep % bd == 0] or [d_rep]
+        for bd in cands:
+            fn = lambda b=bd: kops.bcoo_spmm(  # noqa: E731
+                blocks, sel, rows, cols, h, n_row_blocks=rb_rep,
+                bm=bm, bk=bk, bd=b, row_ptr=rptr, interpret=interpret)
+            us = _bench(fn, iters=1 if interpret else 3) * 1e6
+            cfg = SpmmConfig(bd=bd, chunk=DEFAULT_CHUNK, source="swept")
+            if best is None or us < best[0]:
+                best = (us, cfg)
+    return best[1], best[0]

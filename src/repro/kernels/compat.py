@@ -1,0 +1,26 @@
+"""Version compatibility shims for the Pallas TPU API.
+
+Pinned containers ship different jax minors: ``pltpu.CompilerParams`` was
+named ``pltpu.TPUCompilerParams`` before jax 0.5, and some builds lack the
+``dimension_semantics`` kwarg entirely. All kernels route through
+:func:`tpu_compiler_params` so the sweep suite runs on every image.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def tpu_compiler_params(dimension_semantics: tuple[str, ...]):
+    """Build compiler params naming parallel/arbitrary grid axes.
+
+    Returns ``None`` when this jax exposes no compiler-params class at all
+    (``pallas_call`` accepts ``compiler_params=None``).
+    """
+    cls = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams", None)
+    if cls is None:  # pragma: no cover - ancient/foreign builds
+        return None
+    try:
+        return cls(dimension_semantics=dimension_semantics)
+    except TypeError:  # pragma: no cover - kwarg renamed/removed
+        return cls()

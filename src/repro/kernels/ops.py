@@ -3,11 +3,18 @@
 On this CPU container the kernels run in ``interpret=True``; on TPU the same
 call sites compile to Mosaic. ``default_backend()`` picks automatically, and
 ``repro.core`` ops accept an explicit ``backend`` string everywhere.
+
+SpMM dispatch consults :mod:`repro.kernels.autotune`: when ``bd`` is not
+given explicitly, the per-signature config cache supplies the tuned dense
+column tile (or a heuristic default if the signature was never swept).
 """
 from __future__ import annotations
 
+import math
+
 import jax
 
+from repro.kernels import autotune
 from repro.kernels.bcoo_spmm import bcoo_spmm as _bcoo_spmm_pallas
 from repro.kernels.gather_matmul import gather_matmul as _gather_matmul_pallas
 
@@ -22,12 +29,26 @@ def default_backend() -> str:
 
 
 def bcoo_spmm(blocks, sel, row_ids, col_ids, h, *, n_row_blocks, bm, bk,
-              bd: int = 512, interpret: bool | None = None):
+              bd: int | None = None, row_ptr=None, bias=None, residual=None,
+              relu: bool = False, interpret: bool | None = None):
     if interpret is None:
         interpret = not on_tpu()
+    d = h.shape[-1]
+    if bd is None:
+        sig = autotune.signature(
+            "pallas_interpret" if interpret else "pallas",
+            bm=bm, bk=bk, d=d, s_pad=sel.shape[0],
+            n_row_blocks=n_row_blocks, n_col_blocks=h.shape[0] // bk)
+        bd = autotune.lookup(sig, d=d).bd
+    bd = min(bd, d)
+    if d % bd:
+        # A tuned bd from a pow2 shape bucket may not divide this exact d;
+        # fall back to the largest common tile rather than failing dispatch.
+        bd = math.gcd(bd, d)
     return _bcoo_spmm_pallas(
         blocks, sel, row_ids, col_ids, h,
-        n_row_blocks=n_row_blocks, bm=bm, bk=bk, bd=bd, interpret=interpret)
+        n_row_blocks=n_row_blocks, bm=bm, bk=bk, bd=bd, row_ptr=row_ptr,
+        bias=bias, residual=residual, relu=relu, interpret=interpret)
 
 
 def gather_matmul(x, g, idx, *, bk: int = 128, transpose_lhs: bool = True,

@@ -47,6 +47,7 @@ def run_gnn(args) -> dict:
             n_subgraphs=args.subgraphs, method=args.pool_method,
             roots=args.roots, walk_length=args.walk_length,
             n_buckets=args.buckets, prefetch=not args.no_prefetch,
+            autotune=not args.no_autotune,
             **common)
         tr = MinibatchTrainer(cfg, g)
     else:
@@ -137,6 +138,8 @@ def main():
     g.add_argument("--walk-length", type=int, default=4)
     g.add_argument("--buckets", type=int, default=2)
     g.add_argument("--no-prefetch", action="store_true")
+    g.add_argument("--no-autotune", action="store_true",
+                   help="skip per-bucket SpMM tile sweeps at startup")
     g.add_argument("--seed", type=int, default=0)
     g.add_argument("--verbose", action="store_true")
     g.set_defaults(fn=run_gnn)

@@ -126,11 +126,24 @@ def build_operands(
 
 
 def spmm_op(a: BlockCOO, at: BlockCOO, h: jax.Array,
-            plan: SamplePlan | None, backend: str) -> jax.Array:
-    """Dispatch: RSC (sampled backward) if a plan is supplied, exact else."""
+            plan: SamplePlan | None, backend: str, *,
+            bias: jax.Array | None = None,
+            residual: jax.Array | None = None,
+            relu: bool = False) -> jax.Array:
+    """Dispatch: RSC (sampled backward) if a plan is supplied, exact else.
+
+    ``bias``/``residual``/``relu`` ride the SpMM's fused epilogue
+    (``out = relu(spmm + bias + residual)``) so GCN-style layers skip one
+    full HBM round-trip per SpMM; gradients flow through the epilogue
+    exactly (see ``core.rsc_spmm``). The gradient TAP of each SpMM output
+    is fused as the ``residual`` term — algebraically identical to the
+    post-hoc ``+ tap``.
+    """
     if plan is None:
-        return exact_spmm(a, at, h, backend)
-    return rsc_spmm(a, at, plan, h, backend)
+        return exact_spmm(a, at, h, backend, bias=bias, residual=residual,
+                          relu=relu)
+    return rsc_spmm(a, at, plan, h, backend, bias=bias, residual=residual,
+                    relu=relu)
 
 
 # ------------------------------ nn primitives ------------------------------

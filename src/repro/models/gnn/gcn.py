@@ -55,13 +55,12 @@ def apply(params, ops: C.GraphOperands, taps: dict, plans: dict | None,
             h = C.dropout(h, dropout_rate, sub, train)
         j = C.dense(params["lin"][l], h)
         name = f"gcn/spmm{l}"
-        hp = C.spmm_op(ops.a, ops.at, j, plans.get(name), backend)
-        if name in taps:
-            hp = hp + taps[name]
-        if l < n_layers - 1:
-            if params["bn"][l] is not None:
-                hp = C.batchnorm(params["bn"][l], hp, valid)
-            h = jax.nn.relu(hp)
-        else:
-            h = hp
+        # Fused epilogue: the tap rides as the residual term, and ReLU
+        # fuses into the SpMM whenever nothing (batchnorm) sits between.
+        fuse_relu = l < n_layers - 1 and params["bn"][l] is None
+        hp = C.spmm_op(ops.a, ops.at, j, plans.get(name), backend,
+                       residual=taps.get(name), relu=fuse_relu)
+        if l < n_layers - 1 and params["bn"][l] is not None:
+            hp = jax.nn.relu(C.batchnorm(params["bn"][l], hp, valid))
+        h = hp
     return h

@@ -58,9 +58,10 @@ def apply(params, ops: C.GraphOperands, taps: dict, plans: dict | None,
             key, sub = jax.random.split(key)
             h = C.dropout(h, dropout_rate, sub, train)
         name = f"sage/spmm{l}"
-        m = C.spmm_op(ops.am, ops.amt, h, plans.get(name), backend)
-        if name in taps:
-            m = m + taps[name]
+        # Tap fused as the epilogue residual (the neigh dense layer sits
+        # between the SpMM and the activation, so ReLU stays outside).
+        m = C.spmm_op(ops.am, ops.amt, h, plans.get(name), backend,
+                      residual=taps.get(name))
         hp = C.dense(params["self"][l], h) + C.dense(params["neigh"][l], m)
         if l < n_layers - 1:
             if params["bn"][l] is not None:

@@ -49,6 +49,7 @@ class MinibatchConfig(TrainConfig):
     prefetch: bool = True
     prefetch_depth: int = 2
     resident: int = 0                # device-resident subgraph cache size
+    autotune: bool = True            # sweep SpMM tile configs per bucket
 
 
 def _jit_compiles(jitted) -> int | None:
@@ -106,6 +107,15 @@ class MinibatchTrainer:
             strategy=cfg.strategy,
             refresh_every=refresh) if cfg.rsc else None
 
+        # Tune the SpMM engine once per (bucket, dim) signature BEFORE the
+        # step functions trace: dispatch reads the tuned configs from the
+        # process-wide autotune cache at trace time (nothing consumes the
+        # configs here directly), and every subgraph of a bucket shares
+        # the bucket's signature, so the decision is made exactly once per
+        # bucket (and persists across processes via the JSON cache).
+        if cfg.autotune:
+            self._tune_buckets(dims)
+
         rsc_step, exact_step, eval_logits = make_gnn_steps(
             self.module, self.opt, dims, names,
             dropout=cfg.dropout, backend=cfg.backend)
@@ -122,6 +132,40 @@ class MinibatchTrainer:
             "mode": [], "sub_id": []}
 
     # ------------------------------------------------------------------
+    def _tune_buckets(self, dims: dict[str, int]) -> dict[str, object]:
+        """One autotuner sweep per (bucket shape × dim × plan length).
+
+        Forward SpMMs run the bucket's exact plan (``s_pad`` tiles);
+        sampled backward SpMMs run bucketed plans of ``plan_pad`` entries —
+        both signatures get tuned so trace-time lookups always hit.
+        """
+        from repro.kernels import autotune
+        from repro.kernels import ops as kops
+
+        cfg = self.cfg
+        # Tune under the backend dispatch will actually resolve: "pallas"
+        # off-TPU runs (and signs its lookups) as "pallas_interpret".
+        backend = cfg.backend
+        if backend == "pallas" and not kops.on_tpu():
+            backend = "pallas_interpret"
+        # feat_dim covers layer-0 SpMMs over raw features (GraphSAGE).
+        dim_set = sorted({cfg.hidden, self.n_classes, self.pool.feat_dim,
+                          *dims.values()})
+        tuned: dict[str, object] = {}
+        for b in self.pool.buckets:
+            for d in dim_set:
+                for s_pad in {b.s_pad, b.plan_pad}:
+                    sig = autotune.signature(
+                        backend, bm=cfg.block, bk=cfg.block, d=d,
+                        s_pad=s_pad, n_row_blocks=b.n_blocks,
+                        n_col_blocks=b.n_blocks)
+                    if sig not in tuned:
+                        tuned[sig] = autotune.get_or_tune(
+                            backend, bm=cfg.block, bk=cfg.block, d=d,
+                            s_pad=s_pad, n_row_blocks=b.n_blocks,
+                            n_col_blocks=b.n_blocks)
+        return tuned
+
     def _epoch_schedule(self) -> np.ndarray:
         return self._order_rng.permutation(len(self.pool))
 

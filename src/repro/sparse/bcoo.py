@@ -32,9 +32,15 @@ def _ceil_to(x: int, m: int) -> int:
     return (x + m - 1) // m * m
 
 
+def host_row_ptr(row_ids: np.ndarray, n_row_blocks: int) -> np.ndarray:
+    """CSR-of-tiles pointers from sorted row ids (host, O(n log s))."""
+    return np.searchsorted(
+        row_ids, np.arange(n_row_blocks + 1)).astype(np.int32)
+
+
 @partial(
     jax.tree_util.register_dataclass,
-    data_fields=["blocks", "row_ids", "col_ids"],
+    data_fields=["blocks", "row_ids", "col_ids", "row_ptr"],
     meta_fields=["bm", "bk", "n_rows", "n_cols", "n_row_blocks",
                  "n_col_blocks", "s_total"],
 )
@@ -43,7 +49,10 @@ class BlockCOO:
     """Device block-COO sparse matrix (a JAX pytree).
 
     ``blocks`` has ``s_total + 1`` tiles; index ``s_total`` is the zero
-    sentinel used by sampled plans for padding.
+    sentinel used by sampled plans for padding. ``row_ptr`` is the
+    CSR-of-tiles pointer array (tiles of row block ``r`` are
+    ``[row_ptr[r], row_ptr[r+1])`` in the sorted id lists); it is built
+    once on host and drives the row-segmented SpMM kernel's grid.
     """
 
     blocks: jax.Array     # (s_total + 1, bm, bk)
@@ -56,6 +65,7 @@ class BlockCOO:
     n_row_blocks: int
     n_col_blocks: int
     s_total: int          # number of real (non-sentinel) tiles
+    row_ptr: jax.Array | None = None  # (n_row_blocks + 1,) int32
 
     @property
     def density(self) -> float:
@@ -101,6 +111,7 @@ class HostBlockCOO:
     n_row_blocks: int
     n_col_blocks: int
     s_total: int
+    row_ptr: np.ndarray | None = None  # (n_row_blocks + 1,) int32
 
     def pad_to(self, n_blocks: int, s_pad: int) -> "HostBlockCOO":
         """Pad to a bucket shape: ``n_blocks`` row/col blocks (square
@@ -129,9 +140,13 @@ class HostBlockCOO:
             bm=self.bm, bk=self.bk,
             n_rows=n_blocks * self.bm, n_cols=n_blocks * self.bk,
             n_row_blocks=n_blocks, n_col_blocks=n_blocks,
-            s_total=s_pad)
+            s_total=s_pad,
+            row_ptr=host_row_ptr(row_ids, n_blocks))
 
     def to_device(self, dtype: jnp.dtype = jnp.float32) -> BlockCOO:
+        row_ptr = (self.row_ptr if self.row_ptr is not None
+                   else host_row_ptr(np.asarray(self.row_ids),
+                                     self.n_row_blocks))
         return BlockCOO(
             blocks=jnp.asarray(self.blocks, dtype=dtype),
             row_ids=jnp.asarray(self.row_ids),
@@ -139,7 +154,8 @@ class HostBlockCOO:
             bm=self.bm, bk=self.bk,
             n_rows=self.n_rows, n_cols=self.n_cols,
             n_row_blocks=self.n_row_blocks, n_col_blocks=self.n_col_blocks,
-            s_total=self.s_total)
+            s_total=self.s_total,
+            row_ptr=jnp.asarray(row_ptr))
 
     def nbytes(self) -> int:
         return self.blocks.nbytes
@@ -215,6 +231,7 @@ def csr_to_bcoo_host(
         n_rows=n_rows_p, n_cols=n_cols_p,
         n_row_blocks=n_rb, n_col_blocks=n_cb,
         s_total=s_total,
+        row_ptr=host_row_ptr(u_rb, n_rb),
     )
     meta = BlockMeta(
         row_ids=u_rb, col_ids=u_cb,
