@@ -1,59 +1,39 @@
-"""Minibatch pipeline benchmark: prefetch on/off step times + plan-cache
-hit rates.
+"""Minibatch pipeline benchmark: prefetch, sharded DP and compression.
 
-Trains the same subgraph pool twice — once with the double-buffered
-prefetcher, once with synchronous per-step uploads — and emits one JSON
-report. Warm-up (compile) steps are excluded from the timing medians: with
-shape bucketing there are exactly #buckets of them per mode.
+Three measurement groups, one JSON report (schema ``rsc/bench_minibatch/v1``,
+written to ``--out``, default repo-root ``BENCH_minibatch.json`` —
+schema-checked in CI like ``BENCH_spmm.json``):
+
+* prefetch on/off step times + plan-cache hit rates (single device);
+* data-parallel sharded-pool training over ``--dp`` forced host devices,
+  with per-shard plan-cache statistics;
+* the same DP run with the int8 error-feedback gradient compressor on the
+  all-reduce, so the wire-bytes/accuracy trade is visible next to the
+  uncompressed step times.
+
+Warm-up (compile) steps are excluded from the timing medians: with shape
+bucketing there are exactly #buckets of them per (mode, compression) pair.
 
 Caveat: on a CPU host the "device" upload and the train step compete for
 the same cores, so the overlap win (prefetch_speedup > 1) only shows on an
-accelerator with a real host→device link; CPU runs measure pipeline
-overhead instead.
+accelerator with a real host→device link, and forced host "devices" share
+cores too — DP numbers measure pipeline overhead, not speedup.
 
-    PYTHONPATH=src python -m benchmarks.minibatch_pipeline [--scale 0.006]
+    PYTHONPATH=src python -m benchmarks.minibatch_pipeline \
+        [--scale 0.006] [--dp 4] [--out BENCH_minibatch.json]
 """
 from __future__ import annotations
 
 import argparse
 import json
+import sys
+from pathlib import Path
 
-import numpy as np
-
-from repro.graphs.datasets import load_dataset
-from repro.models.gnn import MODELS
-from repro.pipeline import (MinibatchConfig, MinibatchTrainer, PoolConfig,
-                            build_pool)
+SCHEMA = "rsc/bench_minibatch/v1"
+REPO_ROOT = Path(__file__).resolve().parents[1]
 
 
-def _run(pool, cfg: MinibatchConfig) -> dict:
-    tr = MinibatchTrainer(cfg, pool=pool)
-    res = tr.train(eval_every=max(cfg.epochs, 1))
-    times = np.asarray(res["history"]["step_time"])
-    # Exclude compile steps: the FIRST occurrence of each (bucket, mode)
-    # pair, wherever it lands — exact-step compiles happen at the
-    # switch-back tail, not in a fixed warm-up prefix.
-    seen: set = set()
-    warm = np.zeros(times.size, dtype=bool)
-    for i, (sid, mode) in enumerate(zip(res["history"]["sub_id"],
-                                        res["history"]["mode"])):
-        key = (pool.subgraphs[sid].bucket_id, mode)
-        warm[i] = key not in seen
-        seen.add(key)
-    steady = times[~warm] if (~warm).any() else times
-    return {
-        "steps": int(times.size),
-        "step_time_median_ms": round(float(np.median(steady)) * 1000, 3),
-        "step_time_p90_ms": round(
-            float(np.percentile(steady, 90)) * 1000, 3),
-        "plan_hit_rate": res["plan_hit_rate"],
-        "flops_fraction": res["flops_fraction"],
-        "compiles": res["compiles"],
-        "final_loss": res["history"]["loss"][-1],
-    }
-
-
-def main() -> None:
+def parse_args():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="reddit")
     ap.add_argument("--scale", type=float, default=0.006)
@@ -65,24 +45,104 @@ def main() -> None:
     ap.add_argument("--budget", type=float, default=0.1)
     ap.add_argument("--block", type=int, default=64)
     ap.add_argument("--model", default="gcn")
-    args = ap.parse_args()
+    ap.add_argument("--layers", type=int, default=3)
+    ap.add_argument("--hidden", type=int, default=128)
+    ap.add_argument("--dp", type=int, default=0,
+                    help="also run the sharded engine over N forced host "
+                         "devices (compression off and on)")
+    ap.add_argument("--out", default=str(REPO_ROOT / "BENCH_minibatch.json"))
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke sizes (~seconds)")
+    return ap.parse_args()
+
+
+def _steady_times(pool, res) -> "np.ndarray":
+    """Drop the first occurrence of each (bucket, mode, compress) tuple —
+    those are the compile steps, wherever they land."""
+    import numpy as np
+
+    times = np.asarray(res["history"]["step_time"])
+    comp = res["history"]["compress"] or [False] * times.size
+    sub_ids = res["history"]["sub_id"]
+    seen: set = set()
+    warm = np.zeros(times.size, dtype=bool)
+    for i, (sid, mode, c) in enumerate(zip(sub_ids,
+                                           res["history"]["mode"], comp)):
+        first = sid if isinstance(sid, int) else sid[0]
+        key = (pool.subgraphs[first].bucket_id, mode, bool(c))
+        warm[i] = key not in seen
+        seen.add(key)
+    return times[~warm] if (~warm).any() else times
+
+
+def _summarize(pool, res) -> dict:
+    import numpy as np
+
+    steady = _steady_times(pool, res)
+    return {
+        "steps": len(res["history"]["step_time"]),
+        "step_time_median_ms": round(float(np.median(steady)) * 1000, 3),
+        "step_time_p90_ms": round(
+            float(np.percentile(steady, 90)) * 1000, 3),
+        "plan_hit_rate": res["plan_hit_rate"],
+        "flops_fraction": res["flops_fraction"],
+        "compiles": res["compiles"],
+        "final_loss": res["history"]["loss"][-1],
+    }
+
+
+def main() -> None:
+    args = parse_args()
+    if args.tiny:
+        args.scale = min(args.scale, 0.003)
+        args.epochs = min(args.epochs, 3)
+        args.subgraphs = min(args.subgraphs, 8)
+        args.roots = min(args.roots, 80)
+        args.hidden = min(args.hidden, 32)
+        args.layers = min(args.layers, 2)
+        args.block = min(args.block, 32)
+        if args.dp == 0:
+            args.dp = 4
+    if args.dp > 1:
+        # Must land in the environment BEFORE jax initializes its backend.
+        from repro.launch.hostdev import force_host_devices
+        force_host_devices(args.dp)
+
+    import numpy as np
+
+    from repro.graphs.datasets import load_dataset
+    from repro.models.gnn import MODELS
+    from repro.pipeline import (MinibatchConfig, MinibatchTrainer,
+                                PoolConfig, build_pool)
 
     g = load_dataset(args.dataset, scale=args.scale)
-    pool = build_pool(
-        g,
-        PoolConfig(n_subgraphs=args.subgraphs, roots=args.roots,
-                   walk_length=args.walk_length, n_buckets=args.buckets,
-                   block=args.block),
-        mean_agg=MODELS[args.model].uses_mean_agg())
+    mean_agg = MODELS[args.model].uses_mean_agg()
 
-    common = dict(
-        model=args.model, n_layers=3, hidden=128, block=args.block,
-        epochs=args.epochs, rsc=True, budget=args.budget,
-        n_subgraphs=args.subgraphs, n_buckets=args.buckets)
-    on = _run(pool, MinibatchConfig(prefetch=True, **common))
-    off = _run(pool, MinibatchConfig(prefetch=False, **common))
+    def make_pool(n_buckets: int):
+        return build_pool(
+            g,
+            PoolConfig(n_subgraphs=args.subgraphs, roots=args.roots,
+                       walk_length=args.walk_length, n_buckets=n_buckets,
+                       block=args.block),
+            mean_agg=mean_agg)
 
+    def run(pool, **kw) -> dict:
+        cfg = MinibatchConfig(
+            model=args.model, n_layers=args.layers, hidden=args.hidden,
+            block=args.block, epochs=args.epochs, rsc=True,
+            budget=args.budget, n_subgraphs=args.subgraphs,
+            n_buckets=len(pool.buckets), **kw)
+        tr = MinibatchTrainer(cfg, pool=pool)
+        res = tr.train(eval_every=max(args.epochs, 1))
+        out = _summarize(pool, res)
+        planner = tr.engine.planner
+        if hasattr(planner, "per_shard_summary"):
+            out["shards"] = planner.per_shard_summary()
+        return out
+
+    pool = make_pool(args.buckets)
     report = {
+        "schema": SCHEMA,
         "dataset": args.dataset,
         "nodes": g.n,
         "edges": g.adj.nnz,
@@ -92,13 +152,32 @@ def main() -> None:
             "host_mbytes": round(
                 sum(s.nbytes() for s in pool.subgraphs) / 2 ** 20, 1),
         },
-        "prefetch_on": on,
-        "prefetch_off": off,
-        "prefetch_speedup": round(
-            off["step_time_median_ms"]
-            / max(on["step_time_median_ms"], 1e-9), 3),
+        "prefetch_on": run(pool, prefetch=True),
+        "prefetch_off": run(pool, prefetch=False),
     }
+    report["prefetch_speedup"] = round(
+        report["prefetch_off"]["step_time_median_ms"]
+        / max(report["prefetch_on"]["step_time_median_ms"], 1e-9), 3)
+
+    if args.dp > 1:
+        import jax
+        if len(jax.devices()) < args.dp:
+            print(f"[bench] only {len(jax.devices())} devices visible, "
+                  f"skipping dp={args.dp} section", file=sys.stderr)
+        else:
+            dp_pool = make_pool(1)       # sharded stacking needs one bucket
+            report["dp"] = {
+                "degree": args.dp,
+                "compression_off": run(dp_pool, dp=args.dp,
+                                       compress_grads=False),
+                "compression_on": run(dp_pool, dp=args.dp,
+                                      compress_grads=True),
+            }
+
+    out_path = Path(args.out)
+    out_path.write_text(json.dumps(report, indent=1) + "\n")
     print(json.dumps(report, indent=1))
+    print(f"[bench] wrote {out_path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -49,6 +49,16 @@ class CacheStats:
     k_history: list = dataclasses.field(default_factory=list)
     auc_history: list = dataclasses.field(default_factory=list)
 
+    def summary(self) -> dict:
+        """JSON-ready snapshot (per-cache / per-shard reporting)."""
+        return {
+            "refreshes": self.refreshes,
+            "allocations": self.allocations,
+            "host_seconds": round(self.host_seconds, 4),
+            "mean_auc": (float(np.mean(self.auc_history))
+                         if self.auc_history else None),
+        }
+
 
 class PlanCache:
     """Owns sampling plans for every RSC op in a model."""
@@ -60,11 +70,13 @@ class PlanCache:
         bucket_frac: float = 1 / 16,
         strategy: str = "greedy",   # or "uniform" (Fig. 6 baseline)
         plan_pad: int | None = None,
+        label: str = "",            # diagnostics: which shard/subgraph
     ):
         self.budget_frac = budget_frac
         self.step_frac = step_frac
         self.bucket_frac = bucket_frac
         self.strategy = strategy
+        self.label = label
         # Fixed absolute plan length. When set, every plan this cache builds
         # (full and sampled) pads to exactly ``plan_pad`` entries, so ALL
         # plans of a shape bucket share one jit signature and the minibatch

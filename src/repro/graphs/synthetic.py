@@ -32,6 +32,10 @@ class GraphData:
     num_classes: int
     multilabel: bool = False
     name: str = "synthetic"
+    # For subgraphs: the parent-graph node id of each local node (None for
+    # root graphs). Lets the pool compute GraphSAINT normalization
+    # coefficients and deduplicated pooled evaluation in parent-id space.
+    nodes: np.ndarray | None = None
 
     @property
     def n(self) -> int:

@@ -1,0 +1,19 @@
+"""Force simulated host devices BEFORE jax initializes (stdlib-only).
+
+XLA reads ``--xla_force_host_platform_device_count`` at backend
+initialization, so the flag must be in the environment before the first
+``import jax`` anywhere in the process. This module deliberately imports
+nothing heavy so CLIs and benchmarks can call it at the very top of their
+entry points.
+"""
+from __future__ import annotations
+
+import os
+
+
+def force_host_devices(n: int) -> None:
+    """Append the device-count flag to XLA_FLAGS unless already set."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if n > 0 and "host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={n}").strip()

@@ -8,6 +8,13 @@ GNN, minibatch (GraphSAINT subgraph pool + per-subgraph RSC caches):
     PYTHONPATH=src python -m repro.launch.train gnn --minibatch \
         --dataset ogbn-products --scale 0.002 --rsc --subgraphs 16
 
+GNN, data-parallel minibatch (mesh-sharded subgraph pool, gradients
+all-reduced each step, optional int8 error-feedback compression; on a CPU
+host simulate devices with --force-host-devices N):
+    PYTHONPATH=src python -m repro.launch.train gnn --minibatch --dp 4 \
+        --force-host-devices 4 --dataset reddit --rsc --subgraphs 8 \
+        --compress-grads
+
 LM (assigned architectures; reduced dims on CPU via --smoke):
     PYTHONPATH=src python -m repro.launch.train lm --arch qwen2-0.5b \
         --smoke --steps 50
@@ -16,10 +23,33 @@ from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 
-import jax
-import numpy as np
+
+def _maybe_force_host_devices() -> None:
+    """Apply --force-host-devices BEFORE anything imports jax.
+
+    XLA reads the flag at backend initialization, so it must be in the
+    environment before the first jax import — argparse runs far too late.
+    """
+    from repro.launch.hostdev import force_host_devices
+
+    for i, arg in enumerate(sys.argv):
+        if arg == "--force-host-devices":
+            if i + 1 >= len(sys.argv):
+                raise SystemExit("--force-host-devices needs a value")
+            force_host_devices(int(sys.argv[i + 1]))
+            return
+        if arg.startswith("--force-host-devices="):
+            force_host_devices(int(arg.split("=", 1)[1]))
+            return
+
+
+_maybe_force_host_devices()
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs import get_arch, make_batch, smoke_config
@@ -42,14 +72,35 @@ def run_gnn(args) -> dict:
         strategy=args.strategy, block=args.block, seed=args.seed,
         backend=args.backend)
     extra: dict = {}
+    if (args.dp > 1 or args.mesh) and not args.minibatch:
+        raise SystemExit("--dp/--mesh require --minibatch (the sharded "
+                         "source partitions the subgraph pool)")
+    if args.compress_grads and not (args.dp > 1 or args.mesh):
+        raise SystemExit("--compress-grads compresses the data-parallel "
+                         "all-reduce; it needs --dp N (or --mesh)")
     if args.minibatch:
+        mesh = None
+        if args.mesh:
+            from repro.launch.mesh import parse_mesh_spec
+            mesh = parse_mesh_spec(args.mesh)
+            if "data" not in mesh.axis_names:
+                raise SystemExit(f"--mesh {args.mesh!r} lacks a 'data' "
+                                 "axis (the sharded pool axis)")
+            mesh_dp = int(mesh.shape["data"])
+            if args.dp and args.dp != mesh_dp:
+                raise SystemExit(
+                    f"--dp {args.dp} contradicts --mesh {args.mesh!r} "
+                    f"(data axis = {mesh_dp})")
+            args.dp = mesh_dp
         cfg = MinibatchConfig(
             n_subgraphs=args.subgraphs, method=args.pool_method,
             roots=args.roots, walk_length=args.walk_length,
             n_buckets=args.buckets, prefetch=not args.no_prefetch,
             autotune=not args.no_autotune,
+            saint_norm=not args.no_saint_norm,
+            dp=args.dp, compress_grads=args.compress_grads,
             **common)
-        tr = MinibatchTrainer(cfg, g)
+        tr = MinibatchTrainer(cfg, g, mesh=mesh)
     else:
         tr = GNNTrainer(TrainConfig(**common), g)
     t0 = time.perf_counter()
@@ -61,6 +112,12 @@ def run_gnn(args) -> dict:
                  "n_buckets": res["n_buckets"],
                  "compiles": res["compiles"],
                  "plan_hit_rate": res["plan_hit_rate"]}
+        if args.dp > 1:
+            planner = tr.engine.planner
+            extra["dp"] = args.dp
+            extra["compress_grads"] = args.compress_grads
+            if hasattr(planner, "per_shard_summary"):
+                extra["shards"] = planner.per_shard_summary()
     print(json.dumps({
         "model": args.model, "dataset": args.dataset,
         "rsc": args.rsc, "budget": args.budget,
@@ -140,6 +197,21 @@ def main():
     g.add_argument("--no-prefetch", action="store_true")
     g.add_argument("--no-autotune", action="store_true",
                    help="skip per-bucket SpMM tile sweeps at startup")
+    g.add_argument("--no-saint-norm", action="store_true",
+                   help="disable GraphSAINT loss/aggregator bias "
+                        "correction on sampled pools")
+    g.add_argument("--dp", type=int, default=0,
+                   help="data-parallel degree: shard the subgraph pool "
+                        "over a ('data',) mesh of N devices")
+    g.add_argument("--mesh", default="",
+                   help="explicit mesh spec, e.g. 'data:4' (default: "
+                        "('data',) mesh of --dp devices)")
+    g.add_argument("--compress-grads", action="store_true",
+                   help="int8 error-feedback compression on the DP "
+                        "gradient all-reduce (switch-back applies)")
+    g.add_argument("--force-host-devices", type=int, default=0,
+                   help="simulate N CPU devices (sets XLA_FLAGS before "
+                        "jax initializes)")
     g.add_argument("--seed", type=int, default=0)
     g.add_argument("--verbose", action="store_true")
     g.set_defaults(fn=run_gnn)

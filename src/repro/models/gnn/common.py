@@ -26,7 +26,7 @@ from repro.sparse.topology import mean_normalize, sym_normalize
 @partial(
     jax.tree_util.register_dataclass,
     data_fields=["a", "at", "am", "amt", "features", "labels", "train_mask",
-                 "val_mask", "test_mask", "n_valid"],
+                 "val_mask", "test_mask", "n_valid", "loss_w"],
     meta_fields=["num_classes", "multilabel"],
 )
 @dataclasses.dataclass(frozen=True)
@@ -37,6 +37,10 @@ class GraphOperands:
     shared bucket shape but with different real node counts hit the same jit
     cache entry — the property the minibatch pipeline's shape bucketing
     relies on.
+
+    ``loss_w`` (optional, GraphSAINT pools) is the per-node 1/λ_v loss
+    normalization weight; ``None`` (full batch, disjoint pools) means
+    uniform weights and leaves the loss untouched.
     """
 
     a: BlockCOO          # sym-normalized Ã (GCN/GCNII propagation)
@@ -51,6 +55,7 @@ class GraphOperands:
     n_valid: int | jax.Array   # real (un-padded) node count
     num_classes: int
     multilabel: bool
+    loss_w: jax.Array | None = None  # (N_pad,) f32 or None (uniform)
 
 
 @dataclasses.dataclass(frozen=True)

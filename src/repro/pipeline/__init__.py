@@ -1,15 +1,24 @@
 """Minibatch subgraph pipeline: partitioned GraphSAINT training with
-per-subgraph RSC plan caches and double-buffered prefetch."""
-from repro.pipeline.minibatch_loop import MinibatchConfig, MinibatchTrainer
+per-subgraph RSC plan caches, double-buffered prefetch, and mesh-sharded
+data-parallel pools — all thin configurations of the unified
+``repro.train.engine.Engine``."""
+from repro.pipeline.minibatch_loop import (MinibatchConfig, MinibatchTrainer,
+                                           PooledPlanner, PooledSource,
+                                           minibatch_engine, pooled_evaluate,
+                                           tune_buckets)
 from repro.pipeline.partition import (Bucket, HostSubgraph, PoolConfig,
                                       SubgraphPool, build_pool,
                                       ldg_partition, make_buckets)
 from repro.pipeline.plan_pool import PlanCachePool, PoolPlanStats
 from repro.pipeline.prefetch import Prefetcher, device_operands
+from repro.pipeline.sharding import (ShardedPlanner, ShardedPoolSource,
+                                     shard_pool_ids, stacked_operands)
 
 __all__ = [
     "Bucket", "HostSubgraph", "MinibatchConfig", "MinibatchTrainer",
-    "PlanCachePool", "PoolConfig", "PoolPlanStats", "Prefetcher",
+    "PlanCachePool", "PoolConfig", "PooledPlanner", "PooledSource",
+    "PoolPlanStats", "Prefetcher", "ShardedPlanner", "ShardedPoolSource",
     "SubgraphPool", "build_pool", "device_operands", "ldg_partition",
-    "make_buckets",
+    "make_buckets", "minibatch_engine", "pooled_evaluate",
+    "shard_pool_ids", "stacked_operands", "tune_buckets",
 ]

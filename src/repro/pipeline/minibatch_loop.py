@@ -1,16 +1,26 @@
-"""Minibatch GraphSAINT training with per-subgraph RSC (paper Table 3 rows).
+"""Minibatch GraphSAINT training as configurations of the unified Engine.
 
-Composes the pipeline pieces into the end-to-end engine:
+The loop mechanics (switch-back schedule, step dispatch, metrics,
+checkpointing) live in :mod:`repro.train.engine`; this module supplies the
+pooled pieces:
 
-* offline subgraph pool with shape bucketing (``partition``),
-* per-subgraph plan caches on their own refresh clocks (``plan_pool``),
-* double-buffered host→device prefetch (``prefetch``),
-* the SAME jitted step functions as the full-batch loop
-  (``train/steps.py``), so step math is shared, not duplicated.
+* :class:`PooledSource` — prefetched subgraph-pool batches (one subgraph
+  per step, shape-bucketed, double-buffered host→device upload);
+* :class:`PooledPlanner` — the per-subgraph :class:`PlanCachePool` adapter
+  (paper §3.3.1 footnote 1: caches per sampled subgraph, own clocks);
+* :func:`pooled_evaluate` — pooled evaluation with node-multiplicity
+  dedup: logits of nodes shared by overlapping random-walk subgraphs are
+  averaged in parent-graph id space and every node is scored exactly once
+  (for disjoint ``ldg`` pools this is identical to the old path);
+* :func:`minibatch_engine` — the factory wiring pool, planner and (for
+  ``dp > 1``) the mesh-sharded source + data-parallel runner together;
+* :class:`MinibatchTrainer` — the historical API, now a thin shell.
 
 The switch-back schedule (§3.3.2) runs on the GLOBAL step counter
-(epochs × subgraphs): the last (1−rsc_fraction) of all minibatch steps are
-exact, mirroring the full-batch loop's tail.
+(epochs × steps-per-epoch): the last (1−rsc_fraction) of all minibatch
+steps are exact, mirroring the full-batch loop's tail. With gradient
+compression enabled, the switch-back applies to the compressor as well —
+the exact tail all-reduces uncompressed f32 gradients.
 
 One epoch = one pass over the pool in a seeded random order. With the
 ``ldg`` partitioner the parts are disjoint and cover the graph, so an epoch
@@ -19,10 +29,8 @@ touches every training node exactly once, like classic minibatch SGD.
 from __future__ import annotations
 
 import dataclasses
-import time
 from collections import OrderedDict
 
-import jax
 import numpy as np
 
 from repro.core.schedule import RSCSchedule
@@ -31,15 +39,18 @@ from repro.models.gnn import MODELS
 from repro.pipeline.partition import PoolConfig, SubgraphPool, build_pool
 from repro.pipeline.plan_pool import PlanCachePool
 from repro.pipeline.prefetch import Prefetcher
-from repro.train.loop import TrainConfig
-from repro.train.metrics import metric_fn
-from repro.train.optimizer import Adam
-from repro.train.steps import make_gnn_steps
+from repro.train.engine import Engine, TrainConfig
 
 
 @dataclasses.dataclass
 class MinibatchConfig(TrainConfig):
-    """TrainConfig + pool/prefetch knobs. ``epochs`` = passes over pool."""
+    """TrainConfig + pool/prefetch/data-parallel knobs.
+
+    ``epochs`` = passes over the pool. ``dp > 1`` shards the pool across a
+    ``("data",)`` mesh of that many devices (forces a single shape bucket)
+    and all-reduces gradients each step; ``compress_grads`` routes the
+    all-reduce through the int8 error-feedback compressor.
+    """
 
     n_subgraphs: int = 8
     method: str = "random_walk"      # or "ldg"
@@ -50,223 +61,252 @@ class MinibatchConfig(TrainConfig):
     prefetch_depth: int = 2
     resident: int = 0                # device-resident subgraph cache size
     autotune: bool = True            # sweep SpMM tile configs per bucket
+    saint_norm: bool = True          # GraphSAINT λ/α bias correction
+    # Data-parallel
+    dp: int = 0                      # 0/1 = single device; N = shards
+    compress_grads: bool = False     # int8 EF compression on the all-reduce
+    compress_block: int = 128
 
 
-def _jit_compiles(jitted) -> int | None:
-    """Number of tracings a jitted fn accumulated (None if unsupported)."""
-    try:
-        return int(jitted._cache_size())
-    except AttributeError:
-        return None
+def tune_buckets(pool: SubgraphPool, cfg, dims: dict[str, int],
+                 n_classes: int) -> dict[str, object]:
+    """One autotuner sweep per (bucket shape × dim × plan length).
 
+    Forward SpMMs run the bucket's exact plan (``s_pad`` tiles); sampled
+    backward SpMMs run bucketed plans of ``plan_pad`` entries — both
+    signatures get tuned so trace-time lookups always hit. Runs BEFORE the
+    step functions trace; dispatch reads the tuned configs from the
+    process-wide autotune cache at trace time, and every subgraph of a
+    bucket shares the bucket's signature, so the decision is made exactly
+    once per bucket (and persists across processes via the JSON cache).
+    """
+    from repro.kernels import autotune
+    from repro.kernels import ops as kops
 
-class MinibatchTrainer:
-    """GraphSAINT-style minibatch trainer over a bucketed subgraph pool."""
-
-    def __init__(self, cfg: MinibatchConfig, graph: GraphData | None = None,
-                 pool: SubgraphPool | None = None):
-        if pool is None:
-            if graph is None:
-                raise ValueError("need a graph or a prebuilt pool")
-            pool = build_pool(
-                graph,
-                PoolConfig(n_subgraphs=cfg.n_subgraphs, method=cfg.method,
-                           roots=cfg.roots, walk_length=cfg.walk_length,
-                           n_buckets=cfg.n_buckets, block=cfg.block,
-                           degree_sort=cfg.degree_sort, seed=cfg.seed),
-                mean_agg=MODELS[cfg.model].uses_mean_agg())
-        self.cfg = cfg
-        self.pool = pool
-        self.module = MODELS[cfg.model]
-        if self.module.uses_mean_agg() != pool.mean_agg:
-            raise ValueError(
-                f"pool built with mean_agg={pool.mean_agg} but model "
-                f"{cfg.model!r} needs mean_agg={self.module.uses_mean_agg()}")
-
-        self.n_classes = pool.num_classes
-        key = jax.random.PRNGKey(cfg.seed)
-        self.params = self.module.init(
-            key, pool.feat_dim, cfg.hidden, self.n_classes, cfg.n_layers,
-            cfg.batchnorm)
-        self.opt = Adam(lr=cfg.lr, weight_decay=cfg.weight_decay)
-        self.opt_state = self.opt.init(self.params)
-
-        total_steps = cfg.epochs * len(pool)
-        rsc_frac = cfg.rsc_fraction if cfg.switching else 1.0
-        refresh = cfg.refresh_every if cfg.caching else 1
-        self.schedule = RSCSchedule(
-            total_steps=total_steps, rsc_fraction=rsc_frac,
-            refresh_every=refresh, allocate_every=refresh)
-
-        names = self.module.spmm_names(cfg.n_layers)
-        dims = self.module.spmm_dims(cfg.n_layers, cfg.hidden,
-                                     self.n_classes)
-        self.plan_pool = PlanCachePool(
-            pool, names, dims,
-            budget_frac=cfg.budget, step_frac=cfg.step_frac,
-            strategy=cfg.strategy,
-            refresh_every=refresh) if cfg.rsc else None
-
-        # Tune the SpMM engine once per (bucket, dim) signature BEFORE the
-        # step functions trace: dispatch reads the tuned configs from the
-        # process-wide autotune cache at trace time (nothing consumes the
-        # configs here directly), and every subgraph of a bucket shares
-        # the bucket's signature, so the decision is made exactly once per
-        # bucket (and persists across processes via the JSON cache).
-        if cfg.autotune:
-            self._tune_buckets(dims)
-
-        rsc_step, exact_step, eval_logits = make_gnn_steps(
-            self.module, self.opt, dims, names,
-            dropout=cfg.dropout, backend=cfg.backend)
-        self._rsc_step = jax.jit(rsc_step)
-        self._exact_step = jax.jit(exact_step)
-        self._eval = jax.jit(eval_logits)
-
-        self._order_rng = np.random.default_rng(cfg.seed)
-        # Resident device-operand LRU shared by train epochs and eval sweeps
-        # (None => stream every visit).
-        self._device_cache = OrderedDict() if cfg.resident > 0 else None
-        self.history: dict[str, list] = {
-            "loss": [], "val": [], "test": [], "step_time": [],
-            "mode": [], "sub_id": []}
-
-    # ------------------------------------------------------------------
-    def _tune_buckets(self, dims: dict[str, int]) -> dict[str, object]:
-        """One autotuner sweep per (bucket shape × dim × plan length).
-
-        Forward SpMMs run the bucket's exact plan (``s_pad`` tiles);
-        sampled backward SpMMs run bucketed plans of ``plan_pad`` entries —
-        both signatures get tuned so trace-time lookups always hit.
-        """
-        from repro.kernels import autotune
-        from repro.kernels import ops as kops
-
-        cfg = self.cfg
-        # Tune under the backend dispatch will actually resolve: "pallas"
-        # off-TPU runs (and signs its lookups) as "pallas_interpret".
-        backend = cfg.backend
-        if backend == "pallas" and not kops.on_tpu():
-            backend = "pallas_interpret"
-        # feat_dim covers layer-0 SpMMs over raw features (GraphSAGE).
-        dim_set = sorted({cfg.hidden, self.n_classes, self.pool.feat_dim,
-                          *dims.values()})
-        tuned: dict[str, object] = {}
-        for b in self.pool.buckets:
-            for d in dim_set:
-                for s_pad in {b.s_pad, b.plan_pad}:
-                    sig = autotune.signature(
+    # Tune under the backend dispatch will actually resolve: "pallas"
+    # off-TPU runs (and signs its lookups) as "pallas_interpret".
+    backend = cfg.backend
+    if backend == "pallas" and not kops.on_tpu():
+        backend = "pallas_interpret"
+    # feat_dim covers layer-0 SpMMs over raw features (GraphSAGE).
+    dim_set = sorted({cfg.hidden, n_classes, pool.feat_dim,
+                      *dims.values()})
+    tuned: dict[str, object] = {}
+    for b in pool.buckets:
+        for d in dim_set:
+            for s_pad in {b.s_pad, b.plan_pad}:
+                sig = autotune.signature(
+                    backend, bm=cfg.block, bk=cfg.block, d=d,
+                    s_pad=s_pad, n_row_blocks=b.n_blocks,
+                    n_col_blocks=b.n_blocks)
+                if sig not in tuned:
+                    tuned[sig] = autotune.get_or_tune(
                         backend, bm=cfg.block, bk=cfg.block, d=d,
                         s_pad=s_pad, n_row_blocks=b.n_blocks,
                         n_col_blocks=b.n_blocks)
-                    if sig not in tuned:
-                        tuned[sig] = autotune.get_or_tune(
-                            backend, bm=cfg.block, bk=cfg.block, d=d,
-                            s_pad=s_pad, n_row_blocks=b.n_blocks,
-                            n_col_blocks=b.n_blocks)
-        return tuned
+    return tuned
 
-    def _epoch_schedule(self) -> np.ndarray:
-        return self._order_rng.permutation(len(self.pool))
 
-    def train(self, epochs: int | None = None, eval_every: int = 5,
-              verbose: bool = False) -> dict:
+def pooled_evaluate(pool: SubgraphPool, eval_fn, mfn, params, *,
+                    prefetch: bool = True, depth: int = 2,
+                    resident: int = 0,
+                    cache: OrderedDict | None = None) -> tuple[float, float]:
+    """Pooled evaluation deduplicated by node multiplicity.
+
+    Logits are accumulated in parent-graph id space — a node appearing in
+    several overlapping subgraphs contributes the MEAN of its per-subgraph
+    logits and is scored exactly once, so the metric is computed over the
+    set of covered nodes, not the multiset of appearances. For disjoint
+    ``ldg`` pools every node appears once and this equals the old
+    per-subgraph weighting exactly.
+    """
+    sum_logits: np.ndarray | None = None
+    counts = np.zeros(pool.n_nodes, dtype=np.float32)
+    fetch = Prefetcher(pool, range(len(pool)), depth=depth,
+                       enabled=prefetch, resident=resident, cache=cache)
+    for sid, ops in fetch:
+        sub = pool.subgraphs[sid]
+        logits = np.asarray(eval_fn(params, ops))[: sub.n_valid]
+        if sum_logits is None:
+            sum_logits = np.zeros((pool.n_nodes, logits.shape[1]),
+                                  dtype=np.float64)
+        # parent ids are unique within one subgraph → plain fancy-index add
+        sum_logits[sub.nodes] += logits
+        counts[sub.nodes] += 1.0
+    seen = counts > 0
+    mean_logits = (sum_logits
+                   / np.maximum(counts, 1.0)[:, None]).astype(np.float32)
+    val = mfn(mean_logits, pool.node_labels, pool.node_val_mask & seen)
+    test = mfn(mean_logits, pool.node_labels, pool.node_test_mask & seen)
+    return val, test
+
+
+class PooledPlanner:
+    """Engine planner adapter over the per-subgraph PlanCachePool."""
+
+    def __init__(self, pool: SubgraphPool, names, dims, *,
+                 budget_frac: float, step_frac: float, strategy: str,
+                 refresh_every: int):
+        self.pool = pool
+        self.plan_pool = PlanCachePool(
+            pool, names, dims, budget_frac=budget_frac,
+            step_frac=step_frac, strategy=strategy,
+            refresh_every=refresh_every)
+
+    def plans_for(self, tag, step: int, schedule: RSCSchedule):
+        return self.plan_pool.plans_for(self.pool.subgraphs[int(tag)])
+
+    def record(self, tag, norms) -> None:
+        self.plan_pool.record_norms(
+            int(tag), {k: np.asarray(v) for k, v in norms.items()})
+
+    def flops_fraction(self) -> float:
+        return self.plan_pool.flops_fraction()
+
+    def hit_rate(self) -> float | None:
+        return self.plan_pool.stats.hit_rate
+
+    def stats(self):
+        return self.plan_pool.stats
+
+    def k_latest(self):
+        return None
+
+
+class PooledSource:
+    """Prefetched subgraph-pool batches: one subgraph per step."""
+
+    def __init__(self, pool: SubgraphPool, cfg: MinibatchConfig):
+        self.pool = pool
+        self.cfg = cfg
+        self.steps_per_epoch = len(pool)
+        self.num_classes = pool.num_classes
+        self.feat_dim = pool.feat_dim
+        self.n_buckets = len(pool.buckets)
+        self._order_rng = np.random.default_rng(cfg.seed)
+        # Resident device-operand LRU shared by train epochs and eval
+        # sweeps (None => stream every visit).
+        self._device_cache = OrderedDict() if cfg.resident > 0 else None
+
+    def warmup(self, cfg, dims, n_classes) -> None:
+        tune_buckets(self.pool, cfg, dims, n_classes)
+
+    def batches(self, epoch: int):
         cfg = self.cfg
-        epochs = epochs if epochs is not None else cfg.epochs
-        total = epochs * len(self.pool)
-        if total != self.schedule.total_steps:
-            # keep the switch-back fraction relative to the run actually
-            # executed, not the configured one
-            self.schedule = dataclasses.replace(
-                self.schedule, total_steps=total)
-        key = jax.random.PRNGKey(cfg.seed + 1)
-        mfn = metric_fn(cfg.metric)
-        best_val, best_test = -1.0, -1.0
-        gstep = 0
-
-        for epoch in range(epochs):
-            fetch = Prefetcher(
-                self.pool, self._epoch_schedule(),
-                depth=cfg.prefetch_depth, enabled=cfg.prefetch,
-                resident=cfg.resident, cache=self._device_cache)
-            for sid, ops in fetch:
-                key, sub = jax.random.split(key)
-                use_rsc = cfg.rsc and self.schedule.use_rsc(gstep)
-                t0 = time.perf_counter()
-                if use_rsc:
-                    plans = self.plan_pool.plans_for(
-                        self.pool.subgraphs[sid])
-                    params, opt_state, lv, norms = self._rsc_step(
-                        self.params, self.opt_state, ops, plans, sub)
-                    self.params, self.opt_state = params, opt_state
-                    self.plan_pool.record_norms(
-                        sid, {k: np.asarray(v) for k, v in norms.items()})
-                else:
-                    self.params, self.opt_state, lv = self._exact_step(
-                        self.params, self.opt_state, ops, sub)
-                jax.block_until_ready(lv)
-                dt = time.perf_counter() - t0
-
-                self.history["loss"].append(float(lv))
-                self.history["step_time"].append(dt)
-                self.history["mode"].append("rsc" if use_rsc else "exact")
-                self.history["sub_id"].append(int(sid))
-                gstep += 1
-
-            if epoch % eval_every == 0 or epoch == epochs - 1:
-                val, test = self.evaluate(mfn)
-                self.history["val"].append((epoch, val))
-                self.history["test"].append((epoch, test))
-                if val > best_val:
-                    best_val, best_test = val, test
-                if verbose:
-                    print(f"epoch {epoch:3d} loss "
-                          f"{self.history['loss'][-1]:.4f} "
-                          f"val {val:.4f} test {test:.4f}")
-
-        return {
-            "best_val": best_val,
-            "best_test": best_test,
-            "history": self.history,
-            "cache_stats": (self.plan_pool.stats if self.plan_pool
-                            else None),
-            "plan_hit_rate": (self.plan_pool.stats.hit_rate
-                              if self.plan_pool else None),
-            "flops_fraction": (self.plan_pool.flops_fraction()
-                               if self.plan_pool else 1.0),
-            "compiles": self.compile_counts(),
-            "n_buckets": len(self.pool.buckets),
-        }
-
-    # ------------------------------------------------------------------
-    def evaluate(self, mfn=None) -> tuple[float, float]:
-        """Pooled evaluation: metric per subgraph, weighted by the number of
-        evaluated nodes (nodes in several subgraphs count once per
-        appearance — exact for disjoint `ldg` pools)."""
-        mfn = mfn or metric_fn(self.cfg.metric)
-        cfg = self.cfg
-        acc = {"val": [0.0, 0], "test": [0.0, 0]}
         fetch = Prefetcher(
-            self.pool, range(len(self.pool)),
+            self.pool, self._order_rng.permutation(len(self.pool)),
             depth=cfg.prefetch_depth, enabled=cfg.prefetch,
             resident=cfg.resident, cache=self._device_cache)
         for sid, ops in fetch:
-            sub = self.pool.subgraphs[sid]
-            logits = np.asarray(self._eval(self.params, ops))
-            labels = np.asarray(sub.labels)
-            valid = np.arange(logits.shape[0]) < sub.n_valid
-            for split, mask in (("val", sub.val_mask),
-                                ("test", sub.test_mask)):
-                m = mask & valid
-                cnt = int(m.sum())
-                if cnt:
-                    acc[split][0] += mfn(logits, labels, m) * cnt
-                    acc[split][1] += cnt
-        val = acc["val"][0] / max(acc["val"][1], 1)
-        test = acc["test"][0] / max(acc["test"][1], 1)
-        return val, test
+            yield int(sid), ops
+
+    def evaluate(self, eval_fn, mfn, params) -> tuple[float, float]:
+        cfg = self.cfg
+        return pooled_evaluate(
+            self.pool, eval_fn, mfn, params,
+            prefetch=cfg.prefetch, depth=cfg.prefetch_depth,
+            resident=cfg.resident, cache=self._device_cache)
+
+
+def _build_default_pool(cfg: MinibatchConfig, graph: GraphData,
+                        n_buckets: int) -> SubgraphPool:
+    return build_pool(
+        graph,
+        PoolConfig(n_subgraphs=cfg.n_subgraphs, method=cfg.method,
+                   roots=cfg.roots, walk_length=cfg.walk_length,
+                   n_buckets=n_buckets, block=cfg.block,
+                   degree_sort=cfg.degree_sort, seed=cfg.seed,
+                   saint_norm=cfg.saint_norm),
+        mean_agg=MODELS[cfg.model].uses_mean_agg())
+
+
+def minibatch_engine(cfg: MinibatchConfig, graph: GraphData | None = None,
+                     pool: SubgraphPool | None = None,
+                     mesh=None) -> Engine:
+    """Assemble the minibatch Engine: pooled or mesh-sharded.
+
+    ``cfg.dp > 1`` builds/validates a single-bucket pool, shards it over a
+    ``("data",)`` mesh (``mesh`` arg, or a fresh one over the first ``dp``
+    local devices) and installs the data-parallel runner with per-shard
+    plan caches. Otherwise this is the classic single-device pipeline.
+    """
+    module = MODELS[cfg.model]
+    dp = int(cfg.dp or 0)
+    if pool is None:
+        if graph is None:
+            raise ValueError("need a graph or a prebuilt pool")
+        pool = _build_default_pool(
+            cfg, graph, n_buckets=1 if dp > 1 else cfg.n_buckets)
+    if module.uses_mean_agg() != pool.mean_agg:
+        raise ValueError(
+            f"pool built with mean_agg={pool.mean_agg} but model "
+            f"{cfg.model!r} needs mean_agg={module.uses_mean_agg()}")
+
+    names = module.spmm_names(cfg.n_layers)
+    dims = module.spmm_dims(cfg.n_layers, cfg.hidden, pool.num_classes)
+    refresh = cfg.refresh_every if cfg.caching else 1
+
+    if dp > 1:
+        from repro.launch.mesh import make_dp_mesh
+        from repro.pipeline.sharding import (ShardedPlanner,
+                                             ShardedPoolSource)
+        mesh = mesh if mesh is not None else make_dp_mesh(dp)
+        source = ShardedPoolSource(pool, cfg, mesh)
+        planner = ShardedPlanner(
+            pool, source.shards, names, dims,
+            budget_frac=cfg.budget, step_frac=cfg.step_frac,
+            strategy=cfg.strategy, refresh_every=refresh,
+            mesh=mesh) if cfg.rsc else None
+        return Engine(cfg, source, planner=planner, mesh=mesh,
+                      compress_grads=cfg.compress_grads,
+                      compress_block=cfg.compress_block)
+
+    source = PooledSource(pool, cfg)
+    planner = PooledPlanner(
+        pool, names, dims, budget_frac=cfg.budget,
+        step_frac=cfg.step_frac, strategy=cfg.strategy,
+        refresh_every=refresh) if cfg.rsc else None
+    return Engine(cfg, source, planner=planner)
+
+
+class MinibatchTrainer:
+    """GraphSAINT-style minibatch trainer over a bucketed subgraph pool.
+
+    A named configuration of :class:`repro.train.engine.Engine`; kept for
+    API compatibility (tests, examples, benchmarks construct it directly).
+    """
+
+    def __init__(self, cfg: MinibatchConfig, graph: GraphData | None = None,
+                 pool: SubgraphPool | None = None, mesh=None):
+        self.cfg = cfg
+        self.engine: Engine = minibatch_engine(cfg, graph, pool, mesh)
+        self.pool: SubgraphPool = self.engine.source.pool
+        self.module = MODELS[cfg.model]
+
+    @property
+    def params(self):
+        return self.engine.params
+
+    @property
+    def plan_pool(self):
+        planner = self.engine.planner
+        return getattr(planner, "plan_pool", None)
+
+    @property
+    def schedule(self):
+        return self.engine.schedule
+
+    @property
+    def history(self):
+        return self.engine.history
+
+    def train(self, epochs: int | None = None, eval_every: int = 5,
+              verbose: bool = False) -> dict:
+        return self.engine.train(epochs=epochs, eval_every=eval_every,
+                                 verbose=verbose)
+
+    def evaluate(self, mfn=None) -> tuple[float, float]:
+        return self.engine.evaluate(mfn)
 
     def compile_counts(self) -> dict[str, int | None]:
-        return {"rsc": _jit_compiles(self._rsc_step),
-                "exact": _jit_compiles(self._exact_step),
-                "eval": _jit_compiles(self._eval)}
+        return self.engine.runner.compile_counts()

@@ -21,7 +21,8 @@ import dataclasses
 
 import numpy as np
 
-from repro.graphs.saint import induced_subgraph, random_walk_subgraph
+from repro.graphs.saint import (SaintCoefficients, induced_subgraph,
+                                random_walk_subgraph, saint_coefficients)
 from repro.graphs.synthetic import GraphData
 from repro.models.gnn.common import degree_sorted_arrays, pad_node_arrays
 from repro.sparse.bcoo import (BlockMeta, HostBlockCOO, csr_to_bcoo_host,
@@ -40,6 +41,9 @@ class PoolConfig:
     block: int = 32                  # bm == bk
     degree_sort: bool = True
     seed: int = 0
+    # GraphSAINT bias correction (loss λ_v + aggregator α_{u,v} weights from
+    # exact pool appearance counts). Identity for disjoint ``ldg`` pools.
+    saint_norm: bool = True
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,7 +62,8 @@ class HostSubgraph:
 
     sub_id: int
     bucket_id: int
-    nodes: np.ndarray          # pre-degree-sort subgraph node ids (perm)
+    nodes: np.ndarray          # parent-graph node id per local row (post
+                               # degree-sort order, length n_valid)
     n_valid: int               # real node count (rest is padding)
     prop: HostBlockCOO         # forward operand (Ã or D⁻¹A), bucket-padded
     prop_t: HostBlockCOO       # pre-transposed backward operand
@@ -69,6 +74,7 @@ class HostSubgraph:
     train_mask: np.ndarray     # (n_pad,) bool
     val_mask: np.ndarray
     test_mask: np.ndarray
+    loss_w: np.ndarray | None = None   # (n_pad,) f32 GraphSAINT 1/λ_v
 
     def nbytes(self) -> int:
         return (self.prop.nbytes() + self.prop_t.nbytes()
@@ -84,6 +90,13 @@ class SubgraphPool:
     feat_dim: int
     mean_agg: bool             # operands are D⁻¹A (GraphSAGE) vs Ã
     block: int
+    # Parent-graph arrays for deduplicated pooled evaluation (nodes shared
+    # by overlapping subgraphs are scored once, not once per appearance).
+    n_nodes: int = 0
+    node_labels: np.ndarray | None = None
+    node_val_mask: np.ndarray | None = None
+    node_test_mask: np.ndarray | None = None
+    saint: SaintCoefficients | None = None
 
     def __len__(self) -> int:
         return len(self.subgraphs)
@@ -165,47 +178,78 @@ def build_pool(g: GraphData, cfg: PoolConfig,
     else:
         raise ValueError(f"unknown pool method {cfg.method!r}")
 
+    # GraphSAINT bias correction: exact pool appearance counts. For
+    # disjoint ``ldg`` partitions both corrections are identities (every
+    # node/edge appears exactly once), so nothing changes there.
+    coeffs = saint_coefficients(subs, g.n) if cfg.saint_norm else None
+
     normalize = mean_normalize if mean_agg else sym_normalize
     built = []
     shapes: list[tuple[int, int]] = []
     for sg in subs:
         adj, feats, labels = sg.adj, sg.features, sg.labels
         tr, va, te = sg.train_mask, sg.val_mask, sg.test_mask
-        nodes = np.arange(sg.n, dtype=np.int64)
+        nodes = (sg.nodes if sg.nodes is not None
+                 else np.arange(sg.n, dtype=np.int64))
         if cfg.degree_sort:
             adj, feats, labels, tr, va, te, perm = degree_sorted_arrays(
                 adj, feats, labels, tr, va, te)
             nodes = nodes[perm]
         a_csr = normalize(adj)
+        loss_w = None
+        if coeffs is not None:
+            # Aggregator normalization (GraphSAINT §3.2): DIVIDE each edge
+            # (v aggregates u) of the normalized propagation operand by
+            # α_{u,v} = C_{u,v}/C_v — edges that co-occur with their
+            # destination in every sample (α = 1, e.g. self-loops and all
+            # edges of disjoint pools) are untouched; rarely co-sampled
+            # edges are up-weighted by C_v/C_{u,v} so their expected
+            # contribution over the pool matches the always-present case.
+            # Applied to the subgraph-normalized operand (the repo
+            # renormalizes per subgraph), so this debiases relative to the
+            # pool rather than reproducing the paper's full-graph-Ã form.
+            rows_l = np.repeat(np.arange(a_csr.n_rows, dtype=np.int64),
+                               a_csr.row_nnz())
+            alpha = coeffs.edge_alpha(nodes[rows_l],
+                                      nodes[a_csr.col.astype(np.int64)],
+                                      g.n)
+            a_csr = dataclasses.replace(a_csr, val=a_csr.val / alpha)
+            loss_w = coeffs.loss_weights(nodes)
         prop, _ = csr_to_bcoo_host(a_csr, cfg.block, cfg.block)
         prop_t, meta_t = csr_to_bcoo_host(a_csr.transpose(), cfg.block,
                                           cfg.block)
         fro = float(np.sqrt(np.sum(a_csr.val.astype(np.float64) ** 2)))
         built.append((prop, prop_t, meta_t, fro, feats, labels, tr, va, te,
-                      nodes, sg.n))
+                      nodes, loss_w, sg.n))
         shapes.append((prop.n_row_blocks, prop.s_total))
 
     buckets, assign = make_buckets(shapes, cfg.n_buckets)
 
     pool_subs: list[HostSubgraph] = []
     for i, (prop, prop_t, meta_t, fro, feats, labels, tr, va, te,
-            nodes, n_valid) in enumerate(built):
+            nodes, loss_w, n_valid) in enumerate(built):
         b = buckets[int(assign[i])]
         prop = prop.pad_to(b.n_blocks, b.s_pad)
         prop_t = prop_t.pad_to(b.n_blocks, b.s_pad)
         meta_t = pad_block_meta(meta_t, b.n_blocks)
+        n_pad = b.n_blocks * cfg.block
         feats_p, labels_p, tr_p, va_p, te_p = pad_node_arrays(
-            b.n_blocks * cfg.block, feats, labels, tr, va, te,
-            g.multilabel)
+            n_pad, feats, labels, tr, va, te, g.multilabel)
+        loss_w_p = (np.pad(loss_w, (0, n_pad - loss_w.shape[0]))
+                    if loss_w is not None else None)
         pool_subs.append(HostSubgraph(
             sub_id=i, bucket_id=int(assign[i]),
             nodes=nodes, n_valid=n_valid,
             prop=prop, prop_t=prop_t, meta=meta_t, fro=fro,
             features=feats_p, labels=labels_p,
             train_mask=tr_p, val_mask=va_p, test_mask=te_p,
+            loss_w=loss_w_p,
         ))
 
     return SubgraphPool(
         subgraphs=pool_subs, buckets=buckets,
         num_classes=g.num_classes, multilabel=g.multilabel,
-        feat_dim=g.features.shape[1], mean_agg=mean_agg, block=cfg.block)
+        feat_dim=g.features.shape[1], mean_agg=mean_agg, block=cfg.block,
+        n_nodes=g.n, node_labels=g.labels,
+        node_val_mask=g.val_mask, node_test_mask=g.test_mask,
+        saint=coeffs)

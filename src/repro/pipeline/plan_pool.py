@@ -55,6 +55,7 @@ class PlanCachePool:
         step_frac: float = 0.02,
         strategy: str = "greedy",
         refresh_every: int = 10,
+        label: str = "",
     ):
         self.pool = pool
         self.names = list(names)
@@ -63,6 +64,7 @@ class PlanCachePool:
         self.step_frac = step_frac
         self.strategy = strategy
         self.refresh_every = refresh_every
+        self.label = label          # e.g. "shard3" in sharded pools
         self.caches: dict[int, PlanCache] = {}
         self.stats = PoolPlanStats()
         self._visits_since_refresh: dict[int, int] = {}
@@ -74,7 +76,9 @@ class PlanCachePool:
         cache = PlanCache(budget_frac=self.budget_frac,
                           step_frac=self.step_frac,
                           strategy=self.strategy,
-                          plan_pad=plan_pad)
+                          plan_pad=plan_pad,
+                          label=(f"{self.label}/sub{sub.sub_id}"
+                                 if self.label else f"sub{sub.sub_id}"))
         for n in self.names:
             cache.register(n, sub.prop_t, sub.meta, self.dims[n], sub.fro)
         return cache
@@ -131,3 +135,18 @@ class PlanCachePool:
 
     def host_seconds(self) -> float:
         return sum(c.stats.host_seconds for c in self.caches.values())
+
+    def summary(self) -> dict:
+        """JSON-ready per-pool (per-shard) plan-cache statistics."""
+        return {
+            "label": self.label,
+            "subgraphs": sorted(self.caches.keys()),
+            "hits": self.stats.hits,
+            "cold": self.stats.cold,
+            "refreshes": self.stats.refreshes,
+            "hit_rate": round(self.stats.hit_rate, 4),
+            "flops_fraction": round(self.flops_fraction(), 4),
+            "host_seconds": round(self.host_seconds(), 4),
+            "caches": [{"label": c.label, **c.stats.summary()}
+                       for c in self.caches.values()],
+        }

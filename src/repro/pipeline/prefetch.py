@@ -47,11 +47,19 @@ def device_operands(pool: SubgraphPool, sub: HostSubgraph) -> GraphOperands:
         n_valid=jnp.asarray(np.int32(sub.n_valid)),
         num_classes=pool.num_classes,
         multilabel=pool.multilabel,
+        loss_w=(jnp.asarray(sub.loss_w, jnp.float32)
+                if sub.loss_w is not None else None),
     )
 
 
 class Prefetcher:
-    """Iterate ``(sub_id, GraphOperands)`` over a schedule of pool indices.
+    """Iterate ``(item, operands)`` over a schedule of fetchable items.
+
+    By default an item is a pool index and fetching uploads that subgraph's
+    operands (``device_operands``); a custom ``fetch(item)`` callable makes
+    the same double-buffering serve other loaders — the sharded source
+    fetches TUPLES of per-shard subgraph ids and uploads a device-axis
+    stacked operand batch.
 
     enabled=True: a daemon thread stays ``depth`` uploads ahead of the
     consumer. enabled=False: synchronous upload per step (the ablation
@@ -61,12 +69,13 @@ class Prefetcher:
     def __init__(
         self,
         pool: SubgraphPool,
-        schedule: Sequence[int] | Iterable[int],
+        schedule: Sequence | Iterable,
         *,
         depth: int = 2,
         enabled: bool = True,
         resident: int = 0,
         cache: OrderedDict | None = None,
+        fetch=None,
     ):
         self.pool = pool
         self.schedule = list(schedule)
@@ -74,20 +83,24 @@ class Prefetcher:
         self.enabled = enabled
         self.upload_seconds = 0.0
         self.uploads = 0
+        self._fetch = fetch
         # ``cache`` lets a caller share one resident LRU across many
         # Prefetcher instances (e.g. train epochs + eval sweeps).
-        self._cache: OrderedDict[int, GraphOperands] | None = (
+        self._cache: OrderedDict | None = (
             cache if cache is not None
             else (OrderedDict() if resident > 0 else None))
         self._resident = resident
 
     # ------------------------------------------------------------------
-    def _get(self, sid: int) -> GraphOperands:
+    def _get(self, sid):
         if self._cache is not None and sid in self._cache:
             self._cache.move_to_end(sid)
             return self._cache[sid]
         t0 = time.perf_counter()
-        ops = device_operands(self.pool, self.pool.subgraphs[sid])
+        if self._fetch is not None:
+            ops = self._fetch(sid)
+        else:
+            ops = device_operands(self.pool, self.pool.subgraphs[sid])
         jax.block_until_ready(ops.features)
         self.upload_seconds += time.perf_counter() - t0
         self.uploads += 1

@@ -1,0 +1,225 @@
+"""Mesh-sharded subgraph pools: data-parallel minibatch RSC training.
+
+The GraphSAINT/LDG pool is partitioned into per-device shards on a
+``("data",)`` mesh; every global step stacks one subgraph per shard along a
+leading device axis and feeds the batch to the engine's
+``DataParallelRunner`` (``shard_map`` + pmean'd gradients, see
+``train/steps.py``). Host-side planning stays off the device critical path
+(§3.3.1): each shard keeps its own :class:`PlanCachePool` with independent
+refresh clocks, refreshed from that shard's own gradient row norms, which
+come back stacked ``(n_shards, n_pad)`` from the DP step.
+
+Sharded pools require a single shape bucket: the per-device operands of one
+step are stacked into one array, so every subgraph must share the bucket's
+static shape (the factory forces ``n_buckets=1``).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.schedule import RSCSchedule
+from repro.models.gnn.common import GraphOperands
+from repro.pipeline.partition import HostSubgraph, SubgraphPool
+from repro.pipeline.plan_pool import PlanCachePool
+from repro.pipeline.prefetch import Prefetcher
+from repro.sparse.bcoo import BlockCOO, HostBlockCOO, host_row_ptr
+
+
+def shard_pool_ids(pool: SubgraphPool, n_shards: int) -> list[list[int]]:
+    """Round-robin partition of subgraph ids into equal-size shards."""
+    if len(pool) % n_shards != 0:
+        raise ValueError(
+            f"pool size {len(pool)} not divisible by {n_shards} shards; "
+            "choose n_subgraphs as a multiple of the data-parallel degree")
+    if len(pool.buckets) != 1:
+        raise ValueError(
+            "sharded pools require a single shape bucket (n_buckets=1): "
+            "per-device operands are stacked into one array")
+    ids = list(range(len(pool)))
+    return [ids[d::n_shards] for d in range(n_shards)]
+
+
+def _stack_host_bcoo(props: list[HostBlockCOO]) -> BlockCOO:
+    """Stack per-shard host operands along a leading device axis.
+
+    Arrays stay numpy; the caller's ``device_put`` with a
+    ``P("data", ...)`` sharding performs the (sharded) upload.
+    """
+    p0 = props[0]
+    return BlockCOO(
+        blocks=np.stack([p.blocks for p in props]),
+        row_ids=np.stack([p.row_ids for p in props]),
+        col_ids=np.stack([p.col_ids for p in props]),
+        bm=p0.bm, bk=p0.bk, n_rows=p0.n_rows, n_cols=p0.n_cols,
+        n_row_blocks=p0.n_row_blocks, n_col_blocks=p0.n_col_blocks,
+        s_total=p0.s_total,
+        row_ptr=np.stack([
+            p.row_ptr if p.row_ptr is not None
+            else host_row_ptr(np.asarray(p.row_ids), p.n_row_blocks)
+            for p in props]),
+    )
+
+
+def stacked_operands(pool: SubgraphPool, subs: list[HostSubgraph],
+                     mesh) -> GraphOperands:
+    """One device-axis-stacked operand batch, sharded across the mesh."""
+    prop = _stack_host_bcoo([s.prop for s in subs])
+    prop_t = _stack_host_bcoo([s.prop_t for s in subs])
+    has_w = subs[0].loss_w is not None
+    ops = GraphOperands(
+        a=prop, at=prop_t, am=prop, amt=prop_t,
+        features=np.stack([s.features for s in subs]),
+        labels=np.stack([s.labels for s in subs]),
+        train_mask=np.stack([s.train_mask for s in subs]),
+        val_mask=np.stack([s.val_mask for s in subs]),
+        test_mask=np.stack([s.test_mask for s in subs]),
+        n_valid=np.asarray([s.n_valid for s in subs], np.int32),
+        num_classes=pool.num_classes,
+        multilabel=pool.multilabel,
+        loss_w=(np.stack([s.loss_w for s in subs]).astype(np.float32)
+                if has_w else None),
+    )
+    return jax.device_put(ops, NamedSharding(mesh, P("data")))
+
+
+class ShardedPlanner:
+    """Per-shard :class:`PlanCachePool`\\ s with independent refresh clocks.
+
+    ``plans_for`` receives the step's tuple of per-shard subgraph ids,
+    advances each shard's own clock, and returns the plans stacked along
+    the device axis (sharded onto the mesh). ``record`` splits the stacked
+    gradient row norms back out so every shard refreshes from its own
+    gradients only.
+    """
+
+    def __init__(self, pool: SubgraphPool, shards: list[list[int]],
+                 names, dims, *, budget_frac: float, step_frac: float,
+                 strategy: str, refresh_every: int, mesh):
+        self.pool = pool
+        self.shards = shards
+        self.mesh = mesh
+        self.pools = [
+            PlanCachePool(pool, names, dims, budget_frac=budget_frac,
+                          step_frac=step_frac, strategy=strategy,
+                          refresh_every=refresh_every,
+                          label=f"shard{d}")
+            for d in range(len(shards))]
+        self._shard_of = {sid: d for d, ids in enumerate(shards)
+                          for sid in ids}
+        # Stacked+sharded plan trees keyed by the sid tuple, valid for one
+        # pool-wide plan version (cold builds + refreshes): on steps where
+        # every shard's cache hits AND the tuple recurs, the stack and mesh
+        # upload are skipped. Any refresh bumps the version and CLEARS the
+        # cache, so stale device plan trees never accumulate.
+        self._stacked: dict[tuple, object] = {}
+        self._stacked_version = -1
+
+    def _plan_version(self) -> int:
+        return sum(p.stats.cold + p.stats.refreshes for p in self.pools)
+
+    def plans_for(self, tag, step: int, schedule: RSCSchedule):
+        tag = tuple(int(s) for s in tag)
+        per_shard = []
+        for sid in tag:
+            d = self._shard_of[sid]
+            per_shard.append(
+                self.pools[d].plans_for(self.pool.subgraphs[sid]))
+        version = self._plan_version()
+        if version != self._stacked_version or len(self._stacked) > 64:
+            # version bump = some plan changed; the size cap bounds memory
+            # when random per-shard permutations rarely repeat a tuple
+            self._stacked.clear()
+            self._stacked_version = version
+        stacked = self._stacked.get(tag)
+        if stacked is None:
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *per_shard)
+            stacked = jax.device_put(stacked,
+                                     NamedSharding(self.mesh, P("data")))
+            self._stacked[tag] = stacked
+        return stacked
+
+    def record(self, tag, norms) -> None:
+        for i, sid in enumerate(tag):
+            d = self._shard_of[int(sid)]
+            self.pools[d].record_norms(
+                int(sid), {k: np.asarray(v[i]) for k, v in norms.items()})
+
+    # ------------------------------------------------------------------
+    def flops_fraction(self) -> float:
+        fracs = [p.flops_fraction() for p in self.pools]
+        return float(np.mean(fracs)) if fracs else 1.0
+
+    def hit_rate(self) -> float | None:
+        hits = sum(p.stats.hits for p in self.pools)
+        lookups = sum(p.stats.lookups for p in self.pools)
+        return hits / max(lookups, 1)
+
+    def stats(self):
+        return [p.stats for p in self.pools]
+
+    def k_latest(self):
+        return None
+
+    def per_shard_summary(self) -> list[dict]:
+        return [p.summary() for p in self.pools]
+
+
+class ShardedPoolSource:
+    """Data source yielding device-stacked batches, one subgraph per shard.
+
+    Every shard walks its own seeded permutation each epoch; the step-t
+    batch is ``(shard0[t], shard1[t], …)``. Upload (host → sharded device
+    buffers) runs through the same double-buffered :class:`Prefetcher` as
+    the single-device pipeline, so transfer overlaps compute per shard
+    group. Evaluation streams every subgraph through the single-device
+    evaluator with node-multiplicity dedup (see ``minibatch_loop``).
+    """
+
+    def __init__(self, pool: SubgraphPool, cfg, mesh):
+        from collections import OrderedDict
+
+        from repro.pipeline.minibatch_loop import pooled_evaluate
+
+        self.pool = pool
+        self.mesh = mesh
+        self.n_shards = int(mesh.shape["data"])
+        self.shards = shard_pool_ids(pool, self.n_shards)
+        self.steps_per_epoch = len(pool) // self.n_shards
+        self.num_classes = pool.num_classes
+        self.feat_dim = pool.feat_dim
+        self.n_buckets = len(pool.buckets)
+        self.cfg = cfg
+        self._order_rng = np.random.default_rng(cfg.seed)
+        self._pooled_evaluate = pooled_evaluate
+        # ``resident`` here counts device-resident STACKED step batches
+        # (keyed by the per-shard sid tuple), not individual subgraphs.
+        self._device_cache = (OrderedDict() if cfg.resident > 0 else None)
+
+    def warmup(self, cfg, dims, n_classes) -> None:
+        from repro.pipeline.minibatch_loop import tune_buckets
+        tune_buckets(self.pool, cfg, dims, n_classes)
+
+    def epoch_schedule(self, epoch: int) -> list[tuple[int, ...]]:
+        perms = [self._order_rng.permutation(ids) for ids in self.shards]
+        return [tuple(int(p[t]) for p in perms)
+                for t in range(self.steps_per_epoch)]
+
+    def batches(self, epoch: int):
+        cfg = self.cfg
+        fetch = Prefetcher(
+            self.pool, self.epoch_schedule(epoch),
+            depth=cfg.prefetch_depth, enabled=cfg.prefetch,
+            resident=cfg.resident, cache=self._device_cache,
+            fetch=lambda sids: stacked_operands(
+                self.pool, [self.pool.subgraphs[i] for i in sids],
+                self.mesh))
+        yield from fetch
+
+    def evaluate(self, eval_fn, mfn, params) -> tuple[float, float]:
+        return self._pooled_evaluate(
+            self.pool, eval_fn, mfn, params,
+            prefetch=self.cfg.prefetch, depth=self.cfg.prefetch_depth)

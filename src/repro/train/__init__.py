@@ -1,7 +1,11 @@
-"""Training substrate: optimizer, metrics, RSC training loop."""
+"""Training substrate: optimizer, metrics, the unified RSC engine."""
 from repro.train.optimizer import Adam, apply_updates, clip_by_global_norm
 from repro.train.metrics import accuracy, auc_score, f1_micro
-from repro.train.loop import GNNTrainer, TrainConfig
+from repro.train.engine import (Engine, FullGraphSource, TrainConfig,
+                                full_batch_engine)
+from repro.train.loop import GNNTrainer
 
 __all__ = ["Adam", "apply_updates", "clip_by_global_norm",
-           "accuracy", "auc_score", "f1_micro", "GNNTrainer", "TrainConfig"]
+           "accuracy", "auc_score", "f1_micro", "Engine",
+           "FullGraphSource", "GNNTrainer", "TrainConfig",
+           "full_batch_engine"]

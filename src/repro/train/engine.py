@@ -1,0 +1,486 @@
+"""Unified RSC training engine: one loop skeleton, pluggable data sources.
+
+Full-batch, minibatch (prefetched subgraph pool) and data-parallel
+(mesh-sharded subgraph pool) training used to be separate hand-rolled
+drivers; they are now configurations of one :class:`Engine` that owns
+
+* the :class:`~repro.core.schedule.RSCSchedule` (switch-back §3.3.2 on the
+  global step counter),
+* the plan caches and their refresh clocks (§3.3.1) behind a
+  :class:`Planner` adapter,
+* the SpMM autotune warmup (delegated to the source, which knows its
+  shape buckets),
+* metrics/history bookkeeping and optional checkpointing,
+* the jitted step functions behind a :class:`Runner` adapter — single
+  device, or ``shard_map`` over a ``("data",)`` mesh with pmean'd
+  gradients and optional int8 error-feedback compression.
+
+A **data source** yields ``(tag, operands)`` batches per epoch — the tag
+identifies the plan-cache identity (``None`` for the full graph, a subgraph
+id for a pool, a tuple of per-shard ids for a sharded pool) — and knows how
+to evaluate. A **planner** maps tags to RSC sampling plans and absorbs the
+gradient row norms each step reports. A **runner** executes one optimizer
+step. The engine never needs to know which flavor it is driving.
+
+Concrete pooled/sharded sources live in ``repro/pipeline`` (they depend on
+the pool machinery); the full-graph source lives here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.core.cache import PlanCache
+from repro.core.schedule import RSCSchedule
+from repro.graphs.synthetic import GraphData
+from repro.models.gnn import MODELS
+from repro.models.gnn.common import build_operands
+from repro.train.metrics import metric_fn
+from repro.train.optimizer import Adam
+from repro.train.steps import (init_error_feedback, make_dp_gnn_steps,
+                               make_gnn_steps)
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    model: str = "gcn"
+    n_layers: int = 3
+    hidden: int = 256
+    dropout: float = 0.5
+    batchnorm: bool = True
+    lr: float = 0.01
+    weight_decay: float = 0.0
+    epochs: int = 400
+    seed: int = 0
+    metric: str = "accuracy"
+    # RSC
+    rsc: bool = False
+    budget: float = 0.1
+    step_frac: float = 0.02
+    refresh_every: int = 10
+    allocate_every: int = 10
+    rsc_fraction: float = 0.8
+    caching: bool = True         # False ⇒ refresh every step (Table 4 ablation)
+    switching: bool = True       # False ⇒ rsc for 100% of epochs
+    strategy: str = "greedy"     # "uniform" for Fig. 6 baseline
+    backend: str = "jnp"
+    block: int = 128             # bm == bk
+    degree_sort: bool = True
+    # Checkpointing (optional): save (params, opt_state) every N global
+    # steps to ckpt_dir; Engine.restore() warm-starts from the latest.
+    ckpt_dir: str | None = None
+    ckpt_every: int = 0
+
+
+def jit_compiles(jitted) -> int | None:
+    """Number of tracings a jitted fn accumulated (None if unsupported)."""
+    try:
+        return int(jitted._cache_size())
+    except AttributeError:
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Planners: map batch tags to sampling plans, absorb gradient row norms.
+# ---------------------------------------------------------------------------
+
+class NullPlanner:
+    """RSC off: no plans, no stats."""
+
+    def plans_for(self, tag, step: int, schedule: RSCSchedule):
+        raise RuntimeError("NullPlanner has no plans (rsc disabled)")
+
+    def record(self, tag, norms) -> None:
+        pass
+
+    def flops_fraction(self) -> float:
+        return 1.0
+
+    def hit_rate(self) -> float | None:
+        return None
+
+    def stats(self):
+        return None
+
+    def k_latest(self):
+        return None
+
+
+class FullGraphPlanner:
+    """One :class:`PlanCache` refreshed on the global schedule clock from
+    the previous step's gradient row norms (exactly the full-batch loop's
+    §3.3.1 behavior)."""
+
+    def __init__(self, cfg: TrainConfig, module, at, meta, fro: float,
+                 n_classes: int):
+        self.cache = PlanCache(budget_frac=cfg.budget,
+                               step_frac=cfg.step_frac,
+                               strategy=cfg.strategy)
+        names = module.spmm_names(cfg.n_layers)
+        dims = module.spmm_dims(cfg.n_layers, cfg.hidden, n_classes)
+        for n in names:
+            self.cache.register(n, at, meta, dims[n], fro)
+        self._last_norms: dict[str, np.ndarray] | None = None
+
+    def plans_for(self, tag, step: int, schedule: RSCSchedule):
+        if self._last_norms is not None and schedule.refresh_due(step):
+            self.cache.refresh(self._last_norms)
+        return self.cache.plans()
+
+    def record(self, tag, norms) -> None:
+        self._last_norms = {k: np.asarray(v) for k, v in norms.items()}
+
+    def flops_fraction(self) -> float:
+        return self.cache.flops_fraction()
+
+    def hit_rate(self) -> float | None:
+        return None
+
+    def stats(self):
+        return self.cache.stats
+
+    def k_latest(self):
+        kh = self.cache.stats.k_history
+        return kh[-1] if kh else None
+
+
+# ---------------------------------------------------------------------------
+# Runners: execute one optimizer step (single device / data parallel).
+# ---------------------------------------------------------------------------
+
+class SingleDeviceRunner:
+    """Jitted single-device steps shared by full-batch and minibatch."""
+
+    supports_compression = False
+
+    def __init__(self, module, opt, dims, names, *, dropout: float,
+                 backend: str):
+        rsc_step, exact_step, eval_logits = make_gnn_steps(
+            module, opt, dims, names, dropout=dropout, backend=backend)
+        self._rsc = jax.jit(rsc_step)
+        self._exact = jax.jit(exact_step)
+        self._eval = jax.jit(eval_logits)
+
+    def rsc_step(self, params, opt_state, ops, plans, key,
+                 compress: bool = False):
+        return self._rsc(params, opt_state, ops, plans, key)
+
+    def exact_step(self, params, opt_state, ops, key,
+                   compress: bool = False):
+        return self._exact(params, opt_state, ops, key)
+
+    def eval_logits(self, params, ops):
+        return self._eval(params, ops)
+
+    def compile_counts(self) -> dict[str, int | None]:
+        return {"rsc": jit_compiles(self._rsc),
+                "exact": jit_compiles(self._exact),
+                "eval": jit_compiles(self._eval)}
+
+
+class DataParallelRunner:
+    """``shard_map`` steps over a ``("data",)`` mesh: one subgraph shard per
+    device, gradients pmean'd across the axis — optionally through the int8
+    error-feedback compressor. Holds the per-device EF accumulators;
+    evaluation stays single-device (pooled eval streams subgraphs).
+    """
+
+    supports_compression = True
+
+    def __init__(self, module, opt, dims, names, *, dropout: float,
+                 backend: str, mesh, axis: str = "data",
+                 compress_block: int = 128):
+        from functools import partial
+
+        rsc_step, exact_step, eval_logits = make_dp_gnn_steps(
+            module, opt, dims, names, dropout=dropout, backend=backend,
+            mesh=mesh, axis=axis, compress_block=compress_block)
+        self.mesh = mesh
+        self.axis = axis
+        self.n_devices = int(mesh.shape[axis])
+        self._rsc = {c: jax.jit(partial(rsc_step, compress=c))
+                     for c in (False, True)}
+        self._exact = {c: jax.jit(partial(exact_step, compress=c))
+                       for c in (False, True)}
+        self._eval = jax.jit(eval_logits)
+        # Error-feedback accumulators cost n_devices × params f32: allocate
+        # lazily on the first compressed step. Uncompressed traces thread an
+        # EMPTY pytree instead, so they never pay memory or pass-through.
+        self._err = None
+
+    def _err_state(self, params, compress: bool):
+        if not compress:
+            return {}
+        if self._err is None:
+            self._err = init_error_feedback(params, self.n_devices)
+        return self._err
+
+    def rsc_step(self, params, opt_state, ops, plans, key, compress: bool):
+        compress = bool(compress)
+        keys = jax.random.split(key, self.n_devices)
+        params, opt_state, lv, norms, err = self._rsc[compress](
+            params, opt_state, self._err_state(params, compress),
+            ops, plans, keys)
+        if compress:
+            self._err = err
+        return params, opt_state, lv, norms
+
+    def exact_step(self, params, opt_state, ops, key, compress: bool):
+        compress = bool(compress)
+        keys = jax.random.split(key, self.n_devices)
+        params, opt_state, lv, err = self._exact[compress](
+            params, opt_state, self._err_state(params, compress),
+            ops, keys)
+        if compress:
+            self._err = err
+        return params, opt_state, lv
+
+    def eval_logits(self, params, ops):
+        return self._eval(params, ops)
+
+    def compile_counts(self) -> dict[str, int | None]:
+        def tot(d):
+            ns = [jit_compiles(f) for f in d.values()]
+            return None if all(n is None for n in ns) \
+                else sum(n or 0 for n in ns)
+        return {"rsc": tot(self._rsc), "exact": tot(self._exact),
+                "eval": jit_compiles(self._eval)}
+
+
+# ---------------------------------------------------------------------------
+# Full-graph data source (pooled/sharded sources live in repro.pipeline).
+# ---------------------------------------------------------------------------
+
+class FullGraphSource:
+    """The whole graph as one resident batch, every step."""
+
+    n_buckets = 1
+    steps_per_epoch = 1
+
+    def __init__(self, graph: GraphData, cfg: TrainConfig, module):
+        self.ops, self.meta = build_operands(
+            graph, bm=cfg.block, bk=cfg.block,
+            degree_sort=cfg.degree_sort)
+        self.num_classes = graph.num_classes
+        self.feat_dim = graph.features.shape[1]
+        self.mean_agg = module.uses_mean_agg()
+
+    def planner_operand(self):
+        """(at, meta, fro) of the backward operand the planner scores."""
+        if self.mean_agg:
+            return self.ops.amt, self.meta.amt_meta, self.meta.am_fro
+        return self.ops.at, self.meta.at_meta, self.meta.a_fro
+
+    def warmup(self, cfg, dims, n_classes) -> None:
+        pass
+
+    def batches(self, epoch: int):
+        yield None, self.ops
+
+    def evaluate(self, eval_fn, mfn, params) -> tuple[float, float]:
+        logits = np.asarray(eval_fn(params, self.ops))
+        labels = np.asarray(self.ops.labels)
+        valid = np.arange(logits.shape[0]) < self.ops.n_valid
+        val = mfn(logits, labels, np.asarray(self.ops.val_mask) & valid)
+        test = mfn(logits, labels, np.asarray(self.ops.test_mask) & valid)
+        return val, test
+
+
+# ---------------------------------------------------------------------------
+# The engine.
+# ---------------------------------------------------------------------------
+
+class Engine:
+    """One training loop for every RSC configuration.
+
+    The caller assembles a source and (optionally) a planner; the engine
+    builds params/optimizer/schedule/runner, owns the step loop, the
+    switch-back clock, metrics and checkpointing. ``mesh`` switches the
+    runner to data-parallel ``shard_map`` execution — the source must then
+    yield device-stacked operand batches (see
+    ``repro.pipeline.sharding.ShardedPoolSource``).
+    """
+
+    def __init__(self, cfg: TrainConfig, source, *, planner=None,
+                 mesh=None, compress_grads: bool = False,
+                 compress_block: int = 128):
+        self.cfg = cfg
+        self.source = source
+        self.module = MODELS[cfg.model]
+        self.planner = planner if planner is not None else NullPlanner()
+        self.compress_grads = compress_grads
+        self.n_classes = source.num_classes
+
+        key = jax.random.PRNGKey(cfg.seed)
+        self.params = self.module.init(
+            key, source.feat_dim, cfg.hidden, self.n_classes, cfg.n_layers,
+            cfg.batchnorm)
+        self.opt = Adam(lr=cfg.lr, weight_decay=cfg.weight_decay)
+        self.opt_state = self.opt.init(self.params)
+
+        rsc_frac = cfg.rsc_fraction if cfg.switching else 1.0
+        refresh = cfg.refresh_every if cfg.caching else 1
+        self.schedule = RSCSchedule(
+            total_steps=cfg.epochs * source.steps_per_epoch,
+            rsc_fraction=rsc_frac,
+            refresh_every=refresh, allocate_every=refresh)
+
+        names = self.module.spmm_names(cfg.n_layers)
+        dims = self.module.spmm_dims(cfg.n_layers, cfg.hidden,
+                                     self.n_classes)
+        # Autotune warmup happens BEFORE the steps trace: dispatch reads
+        # the tuned tile configs from the process-wide cache at trace time.
+        if getattr(cfg, "autotune", False):
+            source.warmup(cfg, dims, self.n_classes)
+
+        if mesh is not None:
+            # Commit params/opt state replicated on the mesh up front:
+            # otherwise the first step sees uncommitted inputs, the second
+            # sees its own committed outputs, and jit retraces once.
+            from jax.sharding import NamedSharding, PartitionSpec
+            rep = NamedSharding(mesh, PartitionSpec())
+            self.params = jax.device_put(self.params, rep)
+            self.opt_state = jax.device_put(self.opt_state, rep)
+            self.runner = DataParallelRunner(
+                self.module, self.opt, dims, names,
+                dropout=cfg.dropout, backend=cfg.backend, mesh=mesh,
+                compress_block=compress_block)
+        else:
+            self.runner = SingleDeviceRunner(
+                self.module, self.opt, dims, names,
+                dropout=cfg.dropout, backend=cfg.backend)
+
+        self.ckpt = None
+        self._ckpt_base = 0   # step offset after restore(): saved step
+                              # numbers keep increasing across warm-starts
+                              # so the checkpointer's keep-k GC never
+                              # prefers a stale pre-restore snapshot
+        if cfg.ckpt_dir:
+            from repro.checkpoint.checkpointer import Checkpointer
+            self.ckpt = Checkpointer(cfg.ckpt_dir)
+
+        self.history: dict[str, list] = {
+            "loss": [], "val": [], "test": [], "step_time": [],
+            "mode": [], "k": [], "sub_id": [], "compress": []}
+
+    # ------------------------------------------------------------------
+    def restore(self) -> int | None:
+        """Warm-start (params, opt_state) from the latest checkpoint.
+
+        Returns the checkpoint step, or None if there is none. This is a
+        WARM START, not exact resume: the step counter and the switch-back
+        schedule restart (source/planner state is not checkpointed — see
+        ROADMAP), but subsequent saves continue from the restored step
+        number so keep-k GC never resurrects a stale snapshot.
+        """
+        if self.ckpt is None or self.ckpt.latest_step() is None:
+            return None
+        step, (self.params, self.opt_state) = self.ckpt.restore(
+            (self.params, self.opt_state))
+        self._ckpt_base = step
+        return step
+
+    # ------------------------------------------------------------------
+    def train(self, epochs: int | None = None, eval_every: int = 10,
+              verbose: bool = False) -> dict:
+        cfg = self.cfg
+        epochs = epochs if epochs is not None else cfg.epochs
+        total = epochs * self.source.steps_per_epoch
+        if total != self.schedule.total_steps:
+            # keep the switch-back fraction relative to the run actually
+            # executed, not the configured one
+            self.schedule = dataclasses.replace(
+                self.schedule, total_steps=total)
+        key = jax.random.PRNGKey(cfg.seed + 1)
+        mfn = metric_fn(cfg.metric)
+        best_val, best_test = -1.0, -1.0
+        gstep = 0
+
+        for epoch in range(epochs):
+            for tag, ops in self.source.batches(epoch):
+                key, sub = jax.random.split(key)
+                approx = self.schedule.use_rsc(gstep)
+                use_rsc = cfg.rsc and approx
+                compress = (self.compress_grads
+                            and self.runner.supports_compression
+                            and (approx if cfg.switching else True))
+                t0 = time.perf_counter()
+                if use_rsc:
+                    plans = self.planner.plans_for(tag, gstep, self.schedule)
+                    self.params, self.opt_state, lv, norms = \
+                        self.runner.rsc_step(self.params, self.opt_state,
+                                             ops, plans, sub, compress)
+                    self.planner.record(tag, norms)
+                else:
+                    self.params, self.opt_state, lv = \
+                        self.runner.exact_step(self.params, self.opt_state,
+                                               ops, sub, compress)
+                jax.block_until_ready(lv)
+                dt = time.perf_counter() - t0
+
+                self.history["loss"].append(float(lv))
+                self.history["step_time"].append(dt)
+                self.history["mode"].append("rsc" if use_rsc else "exact")
+                self.history["compress"].append(bool(compress))
+                if tag is not None:
+                    self.history["sub_id"].append(
+                        tag if isinstance(tag, int) else tuple(tag))
+                if use_rsc:
+                    k = self.planner.k_latest()
+                    if k is not None:
+                        self.history["k"].append(k)
+                gstep += 1
+                if (self.ckpt is not None and cfg.ckpt_every > 0
+                        and gstep % cfg.ckpt_every == 0):
+                    self.ckpt.save(self._ckpt_base + gstep,
+                                   (self.params, self.opt_state))
+
+            if epoch % eval_every == 0 or epoch == epochs - 1:
+                val, test = self.evaluate(mfn)
+                self.history["val"].append((epoch, val))
+                self.history["test"].append((epoch, test))
+                if val > best_val:
+                    best_val, best_test = val, test
+                if verbose:
+                    print(f"epoch {epoch:4d} loss "
+                          f"{self.history['loss'][-1]:.4f} "
+                          f"val {val:.4f} test {test:.4f} "
+                          f"mode={self.history['mode'][-1]}")
+
+        if self.ckpt is not None:
+            self.ckpt.save(self._ckpt_base + gstep,
+                           (self.params, self.opt_state))
+            self.ckpt.wait()
+
+        return {
+            "best_val": best_val,
+            "best_test": best_test,
+            "history": self.history,
+            "cache_stats": self.planner.stats(),
+            "plan_hit_rate": self.planner.hit_rate(),
+            "flops_fraction": (self.planner.flops_fraction()
+                               if cfg.rsc else 1.0),
+            "compiles": self.runner.compile_counts(),
+            "n_buckets": self.source.n_buckets,
+        }
+
+    # ------------------------------------------------------------------
+    def evaluate(self, mfn=None) -> tuple[float, float]:
+        mfn = mfn or metric_fn(self.cfg.metric)
+        return self.source.evaluate(self.runner.eval_logits, mfn,
+                                    self.params)
+
+
+def full_batch_engine(cfg: TrainConfig, graph: GraphData) -> Engine:
+    """The full-batch trainer as an Engine configuration."""
+    module = MODELS[cfg.model]
+    source = FullGraphSource(graph, cfg, module)
+    planner = None
+    if cfg.rsc:
+        at, meta, fro = source.planner_operand()
+        planner = FullGraphPlanner(cfg, module, at, meta, fro,
+                                   source.num_classes)
+    return Engine(cfg, source, planner=planner)

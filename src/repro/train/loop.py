@@ -1,184 +1,61 @@
-"""Full-batch GNN training loop with the complete RSC machinery.
+"""Full-batch GNN training as a thin configuration of the unified Engine.
 
 Per paper §6.1 hyperparameters: allocator (Alg. 1) re-runs every 10 steps,
 plans are cached and reused in between (§3.3.1), approximation is active for
 the first 80% of epochs then switches back to exact ops (§3.3.2). Budget
 C ∈ {0.1, 0.3, 0.5}, step α = 0.02·|V|.
 
-The loop owns two jitted steps (exact / RSC). Plan buckets keep the number
-of recompilations bounded. Gradient row norms needed by Eq. 4a come from the
-tap trick (models/gnn/common.py) and are reduced on-device.
+All loop mechanics — schedule, plan-cache refresh, metrics, checkpointing —
+live in :mod:`repro.train.engine`; this module only assembles the
+full-graph source + planner and keeps the historical ``GNNTrainer`` API.
+``TrainConfig`` is re-exported from the engine for backward compatibility.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-
-import jax
-import numpy as np
-
-from repro.core.cache import PlanCache
-from repro.core.schedule import RSCSchedule
 from repro.graphs.synthetic import GraphData
-from repro.models.gnn import MODELS
-from repro.models.gnn.common import build_operands
-from repro.train.metrics import metric_fn
-from repro.train.optimizer import Adam
-from repro.train.steps import make_gnn_steps
+from repro.train.engine import Engine, TrainConfig, full_batch_engine
 
-
-@dataclasses.dataclass
-class TrainConfig:
-    model: str = "gcn"
-    n_layers: int = 3
-    hidden: int = 256
-    dropout: float = 0.5
-    batchnorm: bool = True
-    lr: float = 0.01
-    weight_decay: float = 0.0
-    epochs: int = 400
-    seed: int = 0
-    metric: str = "accuracy"
-    # RSC
-    rsc: bool = False
-    budget: float = 0.1
-    step_frac: float = 0.02
-    refresh_every: int = 10
-    allocate_every: int = 10
-    rsc_fraction: float = 0.8
-    caching: bool = True         # False ⇒ refresh every step (Table 4 ablation)
-    switching: bool = True       # False ⇒ rsc for 100% of epochs
-    strategy: str = "greedy"     # "uniform" for Fig. 6 baseline
-    backend: str = "jnp"
-    block: int = 128             # bm == bk
-    degree_sort: bool = True
+__all__ = ["GNNTrainer", "TrainConfig"]
 
 
 class GNNTrainer:
-    """Paper-faithful trainer for GCN / GraphSAGE / GCNII (+RSC)."""
+    """Paper-faithful trainer for GCN / GraphSAGE / GCNII (+RSC).
+
+    A named configuration of :class:`repro.train.engine.Engine`: the whole
+    graph is one resident batch, plans refresh on the global schedule clock.
+    """
 
     def __init__(self, cfg: TrainConfig, graph: GraphData):
         self.cfg = cfg
         self.graph = graph
-        self.module = MODELS[cfg.model]
-        self.ops, self.meta = build_operands(
-            graph, bm=cfg.block, bk=cfg.block, degree_sort=cfg.degree_sort)
+        self.engine: Engine = full_batch_engine(cfg, graph)
 
-        d_in = graph.features.shape[1]
-        self.n_classes = graph.num_classes
-        key = jax.random.PRNGKey(cfg.seed)
-        self.params = self.module.init(
-            key, d_in, cfg.hidden, self.n_classes, cfg.n_layers,
-            cfg.batchnorm)
-        self.opt = Adam(lr=cfg.lr, weight_decay=cfg.weight_decay)
-        self.opt_state = self.opt.init(self.params)
+    # Historical accessors (tests/examples reach for these).
+    @property
+    def params(self):
+        return self.engine.params
 
-        rsc_frac = cfg.rsc_fraction if cfg.switching else 1.0
-        refresh = cfg.refresh_every if cfg.caching else 1
-        self.schedule = RSCSchedule(
-            total_steps=cfg.epochs, rsc_fraction=rsc_frac,
-            refresh_every=refresh, allocate_every=refresh)
+    @property
+    def ops(self):
+        return self.engine.source.ops
 
-        self.cache = PlanCache(budget_frac=cfg.budget,
-                               step_frac=cfg.step_frac,
-                               strategy=cfg.strategy)
-        if cfg.rsc:
-            names = self.module.spmm_names(cfg.n_layers)
-            dims = self.module.spmm_dims(cfg.n_layers, cfg.hidden,
-                                         self.n_classes)
-            if self.module.uses_mean_agg():
-                at, meta, fro = self.ops.amt, self.meta.amt_meta, \
-                    self.meta.am_fro
-            else:
-                at, meta, fro = self.ops.at, self.meta.at_meta, \
-                    self.meta.a_fro
-            for n in names:
-                self.cache.register(n, at, meta, dims[n], fro)
+    @property
+    def cache(self):
+        planner = self.engine.planner
+        return getattr(planner, "cache", None)
 
-        self._build_steps()
-        self.history: dict[str, list] = {
-            "loss": [], "val": [], "test": [], "step_time": [],
-            "mode": [], "k": []}
-        self._last_norms: dict[str, np.ndarray] | None = None
+    @property
+    def schedule(self):
+        return self.engine.schedule
 
-    # ------------------------------------------------------------------
-    def _build_steps(self):
-        cfg = self.cfg
-        dims = self.module.spmm_dims(cfg.n_layers, cfg.hidden,
-                                     self.n_classes)
-        rsc_step, exact_step, eval_logits = make_gnn_steps(
-            self.module, self.opt, dims,
-            self.module.spmm_names(cfg.n_layers),
-            dropout=cfg.dropout, backend=cfg.backend)
-        self._rsc_step = jax.jit(rsc_step)
-        self._exact_step = jax.jit(exact_step)
-        self._eval = jax.jit(eval_logits)
+    @property
+    def history(self):
+        return self.engine.history
 
-    # ------------------------------------------------------------------
     def train(self, epochs: int | None = None, eval_every: int = 10,
               verbose: bool = False) -> dict:
-        cfg = self.cfg
-        epochs = epochs if epochs is not None else cfg.epochs
-        if epochs != self.schedule.total_steps:
-            # keep the switch-back fraction relative to the run actually
-            # executed, not the configured one
-            self.schedule = dataclasses.replace(
-                self.schedule, total_steps=epochs)
-        key = jax.random.PRNGKey(cfg.seed + 1)
-        mfn = metric_fn(cfg.metric)
-        best_val, best_test = -1.0, -1.0
-
-        for step in range(epochs):
-            key, sub = jax.random.split(key)
-            use_rsc = cfg.rsc and self.schedule.use_rsc(step)
-            t0 = time.perf_counter()
-            if use_rsc:
-                if (self._last_norms is not None
-                        and self.schedule.refresh_due(step)):
-                    self.cache.refresh(self._last_norms)
-                params, opt_state, lv, norms = self._rsc_step(
-                    self.params, self.opt_state, self.ops,
-                    self.cache.plans(), sub)
-                self.params, self.opt_state = params, opt_state
-                self._last_norms = {k: np.asarray(v)
-                                    for k, v in norms.items()}
-            else:
-                self.params, self.opt_state, lv = self._exact_step(
-                    self.params, self.opt_state, self.ops, sub)
-            jax.block_until_ready(lv)
-            dt = time.perf_counter() - t0
-
-            self.history["loss"].append(float(lv))
-            self.history["step_time"].append(dt)
-            self.history["mode"].append("rsc" if use_rsc else "exact")
-            if use_rsc and self.cache.stats.k_history:
-                self.history["k"].append(self.cache.stats.k_history[-1])
-
-            if step % eval_every == 0 or step == epochs - 1:
-                val, test = self.evaluate(mfn)
-                self.history["val"].append((step, val))
-                self.history["test"].append((step, test))
-                if val > best_val:
-                    best_val, best_test = val, test
-                if verbose:
-                    print(f"step {step:4d} loss {float(lv):.4f} "
-                          f"val {val:.4f} test {test:.4f} "
-                          f"mode={'rsc' if use_rsc else 'exact'}")
-
-        return {
-            "best_val": best_val,
-            "best_test": best_test,
-            "history": self.history,
-            "cache_stats": self.cache.stats,
-            "flops_fraction": (self.cache.flops_fraction()
-                               if cfg.rsc else 1.0),
-        }
+        return self.engine.train(epochs=epochs, eval_every=eval_every,
+                                 verbose=verbose)
 
     def evaluate(self, mfn=None) -> tuple[float, float]:
-        mfn = mfn or metric_fn(self.cfg.metric)
-        logits = np.asarray(self._eval(self.params, self.ops))
-        labels = np.asarray(self.ops.labels)
-        valid = np.arange(logits.shape[0]) < self.ops.n_valid
-        val = mfn(logits, labels, np.asarray(self.ops.val_mask) & valid)
-        test = mfn(logits, labels, np.asarray(self.ops.test_mask) & valid)
-        return val, test
+        return self.engine.evaluate(mfn)

@@ -1,13 +1,14 @@
 """Minibatch subgraph pipeline: partitioning, bucketing, per-subgraph plan
-caches, prefetch, and agreement with the full-batch loop."""
+caches, prefetch, GraphSAINT normalization, deduplicated pooled eval, and
+agreement with the full-batch loop."""
 import numpy as np
 import pytest
 
-from repro.graphs.saint import random_walk_subgraph
+from repro.graphs.saint import random_walk_subgraph, saint_coefficients
 from repro.graphs.synthetic import sbm_graph
 from repro.pipeline import (MinibatchConfig, MinibatchTrainer, PlanCachePool,
                             PoolConfig, Prefetcher, build_pool,
-                            ldg_partition)
+                            ldg_partition, pooled_evaluate, shard_pool_ids)
 from repro.train.loop import GNNTrainer, TrainConfig
 
 
@@ -168,6 +169,113 @@ def test_prefetcher_yields_schedule_order(graph):
     sched = [2, 0, 3, 1, 2]
     seen = [sid for sid, ops in Prefetcher(pool, sched, depth=2)]
     assert seen == sched
+
+
+def test_saint_coefficients_counts(graph):
+    """C_v / C_{u,v} are exact appearance counts over the pool."""
+    rng = np.random.default_rng(5)
+    subs = [random_walk_subgraph(graph, 40, 3, rng) for _ in range(4)]
+    coeffs = saint_coefficients(subs, graph.n)
+    counts = np.zeros(graph.n, dtype=np.int64)
+    for sg in subs:
+        counts[sg.nodes] += 1
+    assert np.array_equal(coeffs.node_counts, counts)
+    # loss weight is N / C_v on sampled nodes
+    sampled = np.nonzero(counts)[0]
+    w = coeffs.loss_weights(sampled)
+    np.testing.assert_allclose(w, 4.0 / counts[sampled], rtol=1e-6)
+
+
+def test_saint_norm_identity_for_disjoint_pools(graph):
+    """ldg partitions: every node/edge appears once => α ≡ 1 and uniform
+    loss weights, so the corrected pool equals the uncorrected one."""
+    base = dict(n_subgraphs=4, method="ldg", block=32, n_buckets=1, seed=2)
+    p_on = build_pool(graph, PoolConfig(saint_norm=True, **base))
+    p_off = build_pool(graph, PoolConfig(saint_norm=False, **base))
+    for a, b in zip(p_on.subgraphs, p_off.subgraphs):
+        np.testing.assert_array_equal(a.prop.blocks, b.prop.blocks)
+        assert b.loss_w is None
+        # uniform weight N over real nodes (normalized out in the loss)
+        assert np.allclose(a.loss_w[: a.n_valid], 4.0)
+
+
+def test_saint_alpha_self_loops_uncorrected(graph):
+    """Self-loops added by the GCN normalization are not in the raw-edge
+    counts; they co-occur with their node (C_vv = C_v), so α must be
+    exactly 1 even for heavily shared nodes."""
+    rng = np.random.default_rng(6)
+    subs = [random_walk_subgraph(graph, 60, 3, rng) for _ in range(5)]
+    coeffs = saint_coefficients(subs, graph.n)
+    shared = np.nonzero(coeffs.node_counts > 1)[0]
+    assert shared.size > 0
+    alpha = coeffs.edge_alpha(shared, shared, graph.n)
+    np.testing.assert_array_equal(alpha, np.ones_like(alpha))
+
+
+def test_saint_norm_debiases_overlapping_pools(graph):
+    """Random-walk pools: frequently sampled nodes get down-weighted loss
+    (1/λ_v), and edge values are divided by α = C_uv/C_v ≤ 1 — operand
+    entries only ever grow (strictly, somewhere), never shrink."""
+    base = dict(n_subgraphs=6, method="random_walk", roots=80,
+                walk_length=3, block=32, n_buckets=1, seed=0)
+    pool = build_pool(graph, PoolConfig(saint_norm=True, **base))
+    plain = build_pool(graph, PoolConfig(saint_norm=False, **base))
+    counts = pool.saint.node_counts
+    assert counts.max() > 1        # overlap actually happened
+    grew = False
+    for sub, ref in zip(pool.subgraphs, plain.subgraphs):
+        w = sub.loss_w[: sub.n_valid]
+        np.testing.assert_allclose(
+            w, pool.saint.n_samples / counts[sub.nodes], rtol=1e-6)
+        # normalized adjacency values are >= 0; dividing by α ≤ 1 can
+        # only up-weight
+        assert np.all(sub.prop.blocks >= ref.prop.blocks - 1e-7)
+        grew = grew or bool(
+            np.any(sub.prop.blocks > ref.prop.blocks + 1e-7))
+    assert grew
+
+
+def test_pooled_evaluate_dedups_shared_nodes(graph):
+    """A node in k overlapping subgraphs is scored once (mean logits), so a
+    perfect per-subgraph predictor scores exactly 1.0 and an always-wrong
+    one exactly 0.0 — impossible if appearances were double-counted
+    inconsistently."""
+    pool = build_pool(graph, PoolConfig(
+        n_subgraphs=6, method="random_walk", roots=80, walk_length=3,
+        block=32, n_buckets=2, seed=1))
+    assert pool.saint.node_counts.max() > 1
+    C = pool.num_classes
+
+    def perfect(params, ops):
+        lab = np.asarray(ops.labels).astype(int)
+        return np.eye(C, dtype=np.float32)[lab]
+
+    def wrong(params, ops):
+        lab = (np.asarray(ops.labels).astype(int) + 1) % C
+        return np.eye(C, dtype=np.float32)[lab]
+
+    from repro.train.metrics import accuracy
+    val, test = pooled_evaluate(pool, perfect, accuracy, None,
+                                prefetch=False)
+    assert val == 1.0 and test == 1.0
+    val, test = pooled_evaluate(pool, wrong, accuracy, None, prefetch=False)
+    assert val == 0.0 and test == 0.0
+
+
+def test_shard_pool_ids_validation(graph):
+    pool1 = build_pool(graph, PoolConfig(n_subgraphs=8, method="ldg",
+                                         block=32, n_buckets=1))
+    shards = shard_pool_ids(pool1, 4)
+    assert sorted(sum(shards, [])) == list(range(8))
+    assert all(len(s) == 2 for s in shards)
+    with pytest.raises(ValueError):
+        shard_pool_ids(pool1, 3)          # 8 % 3 != 0
+    pool2 = build_pool(graph, PoolConfig(n_subgraphs=8, roots=50,
+                                         walk_length=3, block=32,
+                                         n_buckets=2))
+    if len(pool2.buckets) > 1:
+        with pytest.raises(ValueError):
+            shard_pool_ids(pool2, 4)      # multi-bucket pools can't stack
 
 
 def test_graphsage_minibatch_runs(graph):
