@@ -1,0 +1,191 @@
+"""Streaming-inference benchmark: pooled vs streamed eval, exact vs RSC.
+
+One JSON report (schema ``rsc/bench_infer/v1``, written to ``--out``,
+default repo-root ``BENCH_infer.json`` — schema-checked in CI like the
+SpMM and minibatch reports):
+
+* ``eval``: a short minibatch training run evaluated two ways — the
+  pooled (dedup) estimator vs exact streaming full-graph inference — with
+  the accuracy delta and coverage gap (pooled eval only scores nodes the
+  pool sampled);
+* ``stream``: exact streaming forward timing across partition counts
+  (partitions/s, wall seconds per full-graph pass);
+* ``sampled``: exact vs RSC-sampled inference time and logits error at a
+  given column-gather budget;
+* ``serve``: activation-cache build time, cached-query throughput and an
+  incremental edge-update recompute (dirty fraction, seconds).
+
+    PYTHONPATH=src python -m benchmarks.infer_stream \
+        [--scale 0.004] [--tiny] [--out BENCH_infer.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+SCHEMA = "rsc/bench_infer/v1"
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def parse_args():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="reddit")
+    ap.add_argument("--scale", type=float, default=0.004)
+    ap.add_argument("--model", default="gcn")
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--hidden", type=int, default=64)
+    ap.add_argument("--epochs", type=int, default=6)
+    ap.add_argument("--subgraphs", type=int, default=6)
+    ap.add_argument("--roots", type=int, default=150)
+    ap.add_argument("--block", type=int, default=32)
+    ap.add_argument("--partitions", type=int, nargs="*", default=[1, 4])
+    ap.add_argument("--sample-budget", type=float, default=0.5)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--queries", type=int, default=512)
+    ap.add_argument("--out", default=str(REPO_ROOT / "BENCH_infer.json"))
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: smallest graph/epochs that still "
+                         "exercise every section")
+    args = ap.parse_args()
+    if args.tiny:
+        args.scale = 0.002
+        args.epochs = 3
+        args.subgraphs = 4
+        args.roots = 80
+        args.repeats = 1
+        args.queries = 64
+    return args
+
+
+def main():
+    args = parse_args()
+    import numpy as np
+
+    from repro.graphs.datasets import load_dataset
+    from repro.infer import NodeServer, StreamConfig, StreamingInference
+    from repro.pipeline import MinibatchConfig, MinibatchTrainer
+    from repro.train.metrics import metric_fn
+
+    g = load_dataset(args.dataset, scale=args.scale, seed=0)
+    cfg = MinibatchConfig(
+        model=args.model, n_layers=args.layers, hidden=args.hidden,
+        epochs=args.epochs, block=args.block, dropout=0.2, rsc=False,
+        seed=0, method="random_walk", n_subgraphs=args.subgraphs,
+        roots=args.roots, walk_length=3, n_buckets=2, prefetch=False,
+        autotune=False)
+    tr = MinibatchTrainer(cfg, g)
+    tr.train(eval_every=max(args.epochs, 1))
+    params = tr.engine.params
+    mfn = metric_fn(cfg.metric)
+
+    # ---- pooled vs streamed eval accuracy ------------------------------
+    pv, pt = tr.engine.evaluate()
+    counts = np.zeros(g.n, np.int64)
+    for s in tr.pool.subgraphs:
+        counts[s.nodes] += 1
+    scfg = StreamConfig(block=args.block, n_partitions=max(args.partitions),
+                        memory_budget_mb=None)
+    si = StreamingInference(g, args.model, params, scfg)
+    logits = si.forward()
+    sv = mfn(logits, si.labels, si.val_mask & si.valid)
+    st = mfn(logits, si.labels, si.test_mask & si.valid)
+    eval_section = {
+        "pooled_val": round(float(pv), 4), "pooled_test": round(float(pt), 4),
+        "stream_val": round(float(sv), 4), "stream_test": round(float(st), 4),
+        "test_delta": round(float(st - pt), 4),
+        "pool_node_coverage": round(float((counts > 0).mean()), 4),
+    }
+
+    # ---- streaming forward timing across partition counts --------------
+    stream_rows = []
+    for n_parts in args.partitions:
+        si_p = StreamingInference(g, args.model, params, StreamConfig(
+            block=args.block, n_partitions=n_parts, memory_budget_mb=None))
+        si_p.forward()                            # compile warmup
+        times = []
+        for _ in range(args.repeats):
+            t0 = time.perf_counter()
+            si_p.forward()
+            times.append(time.perf_counter() - t0)
+        sec = float(np.median(times))
+        stream_rows.append({
+            "partitions": si_p.n_partitions,
+            "seconds_per_pass": round(sec, 4),
+            "partitions_per_s": round(
+                si_p.n_partitions * si_p.n_layers / max(sec, 1e-9), 2),
+        })
+
+    # ---- exact vs RSC-sampled inference --------------------------------
+    si_s = StreamingInference(g, args.model, params, StreamConfig(
+        block=args.block, n_partitions=max(args.partitions),
+        memory_budget_mb=None, sample_budget=args.sample_budget))
+    exact = si_s.forward(sampled=False)
+    sampled = si_s.forward(sampled=True)
+
+    def timed(fn):
+        fn()
+        t0 = time.perf_counter()
+        for _ in range(args.repeats):
+            fn()
+        return (time.perf_counter() - t0) / args.repeats
+
+    t_exact = timed(lambda: si_s.forward(sampled=False))
+    t_sampled = timed(lambda: si_s.forward(sampled=True))
+    rel = float(np.linalg.norm(sampled - exact)
+                / max(np.linalg.norm(exact), 1e-9))
+    nb_e, s_e, g_e = si_s._pads["exact"]
+    nb_s, s_s, g_s = si_s._pads["sampled"]
+    sampled_section = {
+        "budget": args.sample_budget,
+        "exact_seconds": round(t_exact, 4),
+        "sampled_seconds": round(t_sampled, 4),
+        "speedup": round(t_exact / max(t_sampled, 1e-9), 3),
+        "rel_error": round(rel, 4),
+        "tiles_kept_frac": round(s_s / max(s_e, 1), 4),
+        "gather_kept_frac": round(g_s / max(g_e, 1), 4),
+    }
+
+    # ---- serving: cache build, query throughput, edge update -----------
+    srv = NodeServer(g, args.model, params, scfg)
+    rng = np.random.default_rng(0)
+    ids = rng.integers(0, g.n, args.queries)
+    srv.query(ids[:1])                            # touch
+    t0 = time.perf_counter()
+    for start in range(0, args.queries, 64):
+        srv.query(ids[start: start + 64])
+    q_sec = time.perf_counter() - t0
+    # low-degree endpoints: a representative localized update (high-degree
+    # endpoints would dirty nearly the whole ≤L-hop graph)
+    deg = g.adj.row_nnz()
+    u, v = (int(x) for x in np.argsort(deg)[:2])
+    upd = srv.update_edges(add=[(u, v)])
+    serve_section = {
+        "cache_build_s": round(srv.build_seconds, 4),
+        "queries_per_s": round(args.queries / max(q_sec, 1e-9), 1),
+        "update_dirty_frac": round(upd["dirty_frac"], 4),
+        "update_seconds": round(upd["seconds"], 4),
+    }
+
+    report = {
+        "schema": SCHEMA,
+        "dataset": args.dataset,
+        "nodes": g.n,
+        "edges": g.adj.nnz,
+        "model": args.model,
+        "layers": args.layers,
+        "eval": eval_section,
+        "stream": stream_rows,
+        "sampled": sampled_section,
+        "serve": serve_section,
+    }
+    out_path = Path(args.out)
+    out_path.write_text(json.dumps(report, indent=1) + "\n")
+    print(json.dumps(report, indent=1))
+    print(f"[bench] wrote {out_path}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -15,11 +15,17 @@ from __future__ import annotations
 
 import json
 import os
+import pickle
 import threading
 from pathlib import Path
 
 import jax
 import numpy as np
+
+# Reserved npz key carrying the pickled engine/aux state dict of a save.
+# Tree key paths are "/"-joined attribute names, which never look like
+# this, so collisions with real leaves are impossible.
+_AUX_KEY = "__aux_state__"
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -51,9 +57,19 @@ class Checkpointer:
         self._thread: threading.Thread | None = None
 
     # -------------------------------------------------------------- save
-    def save(self, step: int, tree, blocking: bool = False) -> None:
-        """Snapshot to host then write in the background."""
+    def save(self, step: int, tree, blocking: bool = False,
+             aux: dict | None = None) -> None:
+        """Snapshot to host then write in the background.
+
+        ``aux`` is an optional picklable state dict (planner clocks, pool
+        cursor, RNG key — see ``Engine._capture_state``) stored inside the
+        same npz, so a step-exact resume needs no sidecar files and
+        inherits the write's atomicity.
+        """
         flat = _flatten(tree)  # device→host copy happens here, synchronously
+        if aux is not None:
+            flat[_AUX_KEY] = np.frombuffer(
+                pickle.dumps(aux), dtype=np.uint8)
         self.wait()            # one in-flight save at a time
         t = threading.Thread(target=self._write, args=(step, flat),
                              daemon=True)
@@ -109,6 +125,17 @@ class Checkpointer:
                 return step
         steps = self.all_steps()
         return max(steps) if steps else None
+
+    def load_aux(self, step: int | None = None) -> dict | None:
+        """The aux state dict saved alongside a checkpoint, or None (older
+        checkpoints / saves without aux)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None
+        with np.load(self.dir / f"step_{step}.npz") as z:
+            if _AUX_KEY not in z.files:
+                return None
+            return pickle.loads(z[_AUX_KEY].tobytes())
 
     def restore(self, template, step: int | None = None):
         """Returns (step, tree). Template provides structure/dtypes; arrays

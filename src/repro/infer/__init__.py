@@ -1,0 +1,14 @@
+"""Streaming full-graph inference & node serving.
+
+``stream`` runs an exact (or RSC-sampled) layer-wise forward pass over the
+whole graph one row-partition at a time under a device-memory budget;
+``serve`` caches the resulting activations and answers batched node
+queries, recomputing only the dirty ≤L-hop neighborhood after edge
+updates.
+"""
+from repro.infer.stream import (StreamConfig, StreamEvaluator,
+                                StreamingInference)
+from repro.infer.serve import NodeServer
+
+__all__ = ["NodeServer", "StreamConfig", "StreamEvaluator",
+           "StreamingInference"]

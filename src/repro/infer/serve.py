@@ -1,0 +1,167 @@
+"""Node-query serving on cached streaming-inference activations.
+
+:class:`NodeServer` runs one streaming full-graph forward pass up front
+(``infer.stream``, ``store_layers=True``) and then
+
+* answers batched node-id queries straight from the cached final-layer
+  logits (original graph id space — the degree-sort permutation is
+  resolved internally), and
+* absorbs edge updates incrementally: an inserted/removed edge (u, v)
+  perturbs Ã rows of u, v and (through the degree rescaling of the
+  normalization) of their neighbors, and each further SpMM layer widens
+  the affected set by one hop — a dirty-set BFS over the union of the old
+  and new CSR topology bounds the recompute to the ≤L-hop neighborhood.
+  Only those rows are recomputed (batchnorm statistics stay FROZEN at the
+  last full pass — standard serving semantics); all other cached rows are
+  untouched bit-for-bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.graphs.synthetic import GraphData
+from repro.infer.stream import StreamConfig, StreamingInference
+from repro.sparse.csr import CSR
+
+
+def _edit_csr(adj: CSR, add: np.ndarray, remove: np.ndarray) -> CSR:
+    """Apply undirected edge insertions/removals to a 0/1 CSR."""
+    rows = np.repeat(np.arange(adj.n_rows, dtype=np.int64), adj.row_nnz())
+    cols = adj.col.astype(np.int64)
+    key = rows * adj.n_cols + cols
+    if remove.size:
+        drop = np.concatenate([remove[:, 0] * adj.n_cols + remove[:, 1],
+                               remove[:, 1] * adj.n_cols + remove[:, 0]])
+        keep = ~np.isin(key, drop)
+        rows, cols, key = rows[keep], cols[keep], key[keep]
+    if add.size:
+        ar = np.concatenate([add[:, 0], add[:, 1]])
+        ac = np.concatenate([add[:, 1], add[:, 0]])
+        akey = ar * adj.n_cols + ac
+        new = ~np.isin(akey, key)
+        rows = np.concatenate([rows, ar[new]])
+        cols = np.concatenate([cols, ac[new]])
+    uniq = np.unique(rows * adj.n_cols + cols)
+    rows, cols = uniq // adj.n_cols, uniq % adj.n_cols
+    return CSR.from_coo(rows, cols, np.ones(rows.shape[0], np.float32),
+                        adj.shape)
+
+
+def _neighbors(adj: CSR, nodes: np.ndarray) -> np.ndarray:
+    out = [adj.col[adj.rowptr[u]: adj.rowptr[u + 1]].astype(np.int64)
+           for u in nodes]
+    return (np.unique(np.concatenate(out)) if out
+            else np.empty(0, np.int64))
+
+
+class NodeServer:
+    """Cached-activation GNN serving with incremental edge updates."""
+
+    def __init__(self, graph: GraphData, model, params,
+                 cfg: StreamConfig = StreamConfig()):
+        cfg = dataclasses.replace(cfg, store_layers=True,
+                                  sample_budget=None)
+        t0 = time.perf_counter()
+        self.si = StreamingInference(graph, model, params, cfg)
+        self.si.forward(store=True)
+        self.build_seconds = time.perf_counter() - t0
+        self.queries = 0
+        self.query_seconds = 0.0
+        self.updates = 0
+        self.last_dirty: np.ndarray | None = None   # local rows, last update
+
+    @property
+    def n_nodes(self) -> int:
+        return self.si.n_valid
+
+    # ------------------------------------------------------------- query
+    def query(self, node_ids) -> np.ndarray:
+        """Batched logits for original-graph node ids (cache read)."""
+        t0 = time.perf_counter()
+        ids = np.asarray(node_ids, dtype=np.int64)
+        if ids.size and (ids.min() < 0 or ids.max() >= self.n_nodes):
+            raise IndexError(f"node ids must be in [0, {self.n_nodes})")
+        out = self.si.logits[self.si.pos[ids]].copy()
+        self.queries += ids.size
+        self.query_seconds += time.perf_counter() - t0
+        return out
+
+    def predict(self, node_ids) -> np.ndarray:
+        """argmax class per queried node (multilabel: sigmoid>0.5 mask)."""
+        logits = self.query(node_ids)
+        if self.si.multilabel:
+            return (logits > 0.0).astype(np.int32)
+        return logits.argmax(axis=-1).astype(np.int32)
+
+    # ----------------------------------------------------- edge updates
+    def _dirty_sets(self, old_adj: CSR, new_adj: CSR,
+                    seeds: np.ndarray) -> list[np.ndarray]:
+        """Per-layer dirty LOCAL row sets: one BFS hop per SpMM layer.
+
+        Layer 1 outputs change for the seed endpoints and (degree
+        rescaling of the normalization) every neighbor of a seed; each
+        later layer widens by one hop. Old and new topology are both
+        expanded so removals invalidate their former neighborhoods too.
+        """
+        dirty = np.unique(seeds)
+        out = []
+        for _ in range(self.si.n_layers):
+            grown = np.union1d(dirty, np.union1d(
+                _neighbors(old_adj, dirty), _neighbors(new_adj, dirty)))
+            out.append(grown)
+            dirty = grown
+        return out
+
+    def update_edges(self, add=(), remove=()) -> dict:
+        """Apply undirected edge updates (original-id pairs); recompute
+        only the dirty ≤L-hop neighborhood. Returns update statistics.
+
+        DEVICE work is bounded by the dirty set, but the HOST side
+        re-tiles the normalized operand and re-plans partitions from
+        scratch (O(nnz) numpy per call) — batch many edges into ONE call
+        rather than looping; incremental re-tiling of only the touched
+        row blocks is a recorded follow-up (see ROADMAP).
+        """
+        t0 = time.perf_counter()
+        add = np.asarray(list(add), dtype=np.int64).reshape(-1, 2)
+        remove = np.asarray(list(remove), dtype=np.int64).reshape(-1, 2)
+        if add.size + remove.size == 0:
+            return {"edges": 0, "dirty_nodes": 0, "seconds": 0.0}
+        pos = self.si.pos
+        add_l = pos[add] if add.size else add
+        remove_l = pos[remove] if remove.size else remove
+
+        old_adj = self.si.adj
+        new_adj = _edit_csr(old_adj, add_l, remove_l)
+        seeds = np.concatenate([add_l.reshape(-1),
+                                remove_l.reshape(-1)]).astype(np.int64)
+        dirty = self._dirty_sets(old_adj, new_adj, seeds)
+
+        self.si.rebuild_operand(new_adj)
+        self.si.recompute_rows(dirty)
+        self.updates += 1
+        self.last_dirty = dirty[-1]
+        n_pad = self.si.host.n_rows
+        return {
+            "edges": int(add.shape[0] + remove.shape[0]),
+            "dirty_nodes": int(dirty[-1].shape[0]),
+            "dirty_frac": float(dirty[-1].shape[0] / max(self.n_nodes, 1)),
+            "dirty_per_layer": [int(d.shape[0]) for d in dirty],
+            "recomputed_row_frac": float(
+                np.unique(dirty[-1] // self.si.host.bm).shape[0]
+                * self.si.host.bm / n_pad),
+            "seconds": time.perf_counter() - t0,
+        }
+
+    def stats(self) -> dict:
+        return {
+            "n_nodes": self.n_nodes,
+            "n_partitions": self.si.n_partitions,
+            "build_seconds": round(self.build_seconds, 4),
+            "queries": self.queries,
+            "query_seconds": round(self.query_seconds, 6),
+            "updates": self.updates,
+        }

@@ -36,6 +36,7 @@ import dataclasses
 import json
 import os
 import time
+import uuid
 from pathlib import Path
 
 import numpy as np
@@ -115,13 +116,51 @@ class AutotuneCache:
             pass
 
     def save(self) -> None:
+        """Atomic, concurrency-safe persist.
+
+        Concurrent benchmark/CI processes share one cache file, so (a) the
+        current file is re-read and MERGED first, a best-effort courtesy to
+        concurrent writers (ours win on conflict; a writer publishing
+        between our read and our replace can still lose entries — a lost
+        sweep result just re-sweeps later, so no lock is worth the cost);
+        (b) the temp file name is unique per writer (two writers can never
+        interleave bytes in one temp file); (c) the publish is
+        ``os.replace`` — readers see the old or the new complete file,
+        never a torn one. Corruption is impossible; loss is bounded.
+        """
         try:
             self.path.parent.mkdir(parents=True, exist_ok=True)
-            tmp = self.path.with_suffix(".tmp")
-            tmp.write_text(json.dumps(
-                {"version": 1, "entries": self.entries},
-                indent=1, sort_keys=True))
-            tmp.replace(self.path)
+            try:
+                raw = json.loads(self.path.read_text())
+                if isinstance(raw, dict) and isinstance(raw.get("entries"),
+                                                        dict):
+                    merged = dict(raw["entries"])
+                    merged.update(self.entries)
+                    self.entries = merged
+            except (OSError, ValueError):
+                pass
+            # unique per WRITE, not just per process: concurrent threads
+            # of one process must never share a temp file either
+            tmp = self.path.with_name(
+                f".{self.path.name}.{os.getpid()}.{uuid.uuid4().hex}.tmp")
+            try:
+                tmp.write_text(json.dumps(
+                    {"version": 1, "entries": self.entries},
+                    indent=1, sort_keys=True))
+                os.replace(tmp, self.path)
+            except BaseException:
+                tmp.unlink(missing_ok=True)
+                raise
+            # writers killed between write and replace leave orphans with
+            # unique names — sweep OLD siblings so they never accumulate
+            # (age-gated: a live concurrent writer's tmp must survive)
+            cutoff = time.time() - 3600
+            for stale in self.path.parent.glob(f".{self.path.name}.*.tmp"):
+                try:
+                    if stale.stat().st_mtime < cutoff:
+                        stale.unlink()
+                except OSError:
+                    pass
         except OSError:
             pass  # read-only FS: stay in-memory only
 

@@ -70,7 +70,9 @@ def run_gnn(args) -> dict:
         metric=spec.metric, rsc=args.rsc, budget=args.budget,
         caching=not args.no_caching, switching=not args.no_switching,
         strategy=args.strategy, block=args.block, seed=args.seed,
-        backend=args.backend)
+        backend=args.backend, eval_mode=args.eval_mode,
+        stream_partitions=args.stream_partitions,
+        stream_budget_mb=args.stream_budget_mb)
     extra: dict = {}
     if (args.dp > 1 or args.mesh) and not args.minibatch:
         raise SystemExit("--dp/--mesh require --minibatch (the sharded "
@@ -186,6 +188,17 @@ def main():
                    choices=["greedy", "uniform"])
     g.add_argument("--block", type=int, default=64)
     g.add_argument("--backend", default="jnp")
+    g.add_argument("--eval-mode", default="auto",
+                   choices=["auto", "stream"],
+                   help="'stream' evaluates with exact streaming "
+                        "full-graph inference (repro/infer) instead of "
+                        "the source's pooled/dense evaluator")
+    g.add_argument("--stream-partitions", type=int, default=0,
+                   help="explicit streaming-eval partition count "
+                        "(0 = size by --stream-budget-mb)")
+    g.add_argument("--stream-budget-mb", type=float, default=256.0,
+                   help="device-memory budget per streaming-eval "
+                        "partition")
     g.add_argument("--minibatch", action="store_true",
                    help="GraphSAINT subgraph-pool training (pipeline/)")
     g.add_argument("--subgraphs", type=int, default=8)

@@ -182,3 +182,57 @@ def dropout(x, rate, key, train):
         return x
     keep = jax.random.bernoulli(key, 1.0 - rate, x.shape)
     return jnp.where(keep, x / (1.0 - rate), 0.0)
+
+
+# ------------------------- streaming-inference hooks -----------------------
+#
+# The streaming full-graph inference engine (``repro.infer.stream``) runs
+# each layer's SpMM for all nodes one row-partition at a time, with the
+# activations resident on HOST. Every model module implements the hook
+# protocol below; the row-wise (non-SpMM) math runs on host numpy so only
+# the SpMM and the optional pre-map ever touch the device:
+#
+#   infer_n_layers(params) -> int          number of SpMM layers
+#   infer_spmm_dims(params, feat_dim)      dense-operand dim of each SpMM
+#   infer_init(params, feats) -> (h, ctx)  host setup; ctx e.g. GCNII's H⁰
+#   infer_pre(params, l) -> (fn, p) | None row-wise device map applied to
+#                                          the gathered SpMM input as
+#                                          ``fn(p, h)`` (None = identity;
+#                                          fn pure/jittable, ``p`` rides as
+#                                          a jit argument so fresh params
+#                                          never retrace)
+#   infer_post(params, l, p, h, ctx, valid, bn_stats)
+#       -> (h_next, bn_stats)              row-wise host combine of the SpMM
+#                                          output ``p`` with the layer input
+#                                          ``h``; ``bn_stats=None`` computes
+#                                          fresh batch statistics (full
+#                                          pass), a stats tuple applies them
+#                                          FROZEN (incremental row-subset
+#                                          recompute in the serving path)
+#   infer_out(params, h, ctx) -> logits    row-wise host final projection
+#
+# ``np_dense`` / ``np_batchnorm`` are the host mirrors of ``dense`` /
+# ``batchnorm`` the hooks build on.
+
+def np_dense(p, x: np.ndarray) -> np.ndarray:
+    return x @ np.asarray(p["w"]) + np.asarray(p["b"])
+
+
+def np_batchnorm(p, x: np.ndarray, valid: np.ndarray,
+                 stats: tuple | None = None):
+    """Host mirror of :func:`batchnorm`.
+
+    ``stats=None`` computes (mu, var) over valid rows and returns them so
+    callers can freeze them; a provided tuple is applied as-is (row-wise,
+    enabling subset recompute).
+    """
+    if stats is None:
+        m = valid.astype(np.float32)[:, None]
+        cnt = max(float(m.sum()), 1.0)
+        mu = (x * m).sum(axis=0) / cnt
+        var = (((x - mu) ** 2) * m).sum(axis=0) / cnt
+        stats = (mu, var)
+    mu, var = stats
+    out = ((x - mu) / np.sqrt(var + 1e-5)) * np.asarray(p["g"]) \
+        + np.asarray(p["b"])
+    return out.astype(np.float32), stats

@@ -7,6 +7,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.gnn import common as C
 
@@ -40,6 +41,42 @@ def init(key, d_in: int, hidden: int, n_classes: int, n_layers: int,
         params["bn"].append(C.batchnorm_init(dims[l + 1])
                             if (batchnorm and l < n_layers - 1) else None)
     return params
+
+
+# ---------------------- streaming-inference hooks --------------------------
+# (protocol in models/gnn/common.py; orchestration in repro/infer/stream.py)
+
+def infer_n_layers(params) -> int:
+    return len(params["lin"])
+
+
+def infer_spmm_dims(params, feat_dim: int) -> list[int]:
+    # layer l's SpMM consumes dense(lin[l], h): dim = lin[l] output width
+    return [p["w"].shape[1] for p in params["lin"]]
+
+
+def infer_init(params, feats):
+    return np.asarray(feats, np.float32), None
+
+
+def infer_pre(params, l: int):
+    # (pure_fn, pre_params): params stay ARGUMENTS of the jitted layer fn
+    # so repeated evals with fresh params never retrace (common.py contract)
+    def fn(p, h):
+        return h @ p["w"] + p["b"]
+    return fn, params["lin"][l]
+
+
+def infer_post(params, l: int, p, h, ctx, valid, bn_stats=None):
+    if l == len(params["lin"]) - 1:
+        return p, None
+    if params["bn"][l] is not None:
+        p, bn_stats = C.np_batchnorm(params["bn"][l], p, valid, bn_stats)
+    return np.maximum(p, 0.0).astype(np.float32), bn_stats
+
+
+def infer_out(params, h, ctx):
+    return h
 
 
 def apply(params, ops: C.GraphOperands, taps: dict, plans: dict | None,

@@ -9,6 +9,7 @@ import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.gnn import common as C
 
@@ -42,6 +43,45 @@ def init(key, d_in: int, hidden: int, n_classes: int, n_layers: int,
         "proj_out": C.dense_init(keys[-1], hidden, n_classes),
     }
     return params
+
+
+# ---------------------- streaming-inference hooks --------------------------
+# (protocol in models/gnn/common.py; orchestration in repro/infer/stream.py.
+# alpha/lam must match the defaults of ``apply`` — eval uses them too.)
+
+def infer_n_layers(params) -> int:
+    return len(params["w"])
+
+
+def infer_spmm_dims(params, feat_dim: int) -> list[int]:
+    hidden = params["proj_in"]["w"].shape[1]
+    return [hidden] * len(params["w"])
+
+
+def infer_init(params, feats):
+    h0 = np.maximum(
+        C.np_dense(params["proj_in"], np.asarray(feats, np.float32)),
+        0.0).astype(np.float32)
+    return h0, h0
+
+
+def infer_pre(params, l: int):
+    return None         # SpMM input is H^l itself
+
+
+def infer_post(params, l: int, p, h, ctx, valid, bn_stats=None,
+               alpha: float = 0.1, lam: float = 0.5):
+    beta = math.log(lam / (l + 1) + 1.0)
+    ht = (1.0 - alpha) * p + alpha * ctx
+    hp = ((1.0 - beta) * ht
+          + beta * C.np_dense(params["w"][l], ht)).astype(np.float32)
+    if params["bn"][l] is not None:
+        hp, bn_stats = C.np_batchnorm(params["bn"][l], hp, valid, bn_stats)
+    return np.maximum(hp, 0.0).astype(np.float32), bn_stats
+
+
+def infer_out(params, h, ctx):
+    return C.np_dense(params["proj_out"], h).astype(np.float32)
 
 
 def apply(params, ops: C.GraphOperands, taps: dict, plans: dict | None,

@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.gnn import common as C
 
@@ -44,6 +45,41 @@ def init(key, d_in: int, hidden: int, n_classes: int, n_layers: int,
         params["bn"].append(C.batchnorm_init(dims[l + 1])
                             if (batchnorm and l < n_layers - 1) else None)
     return params
+
+
+# ---------------------- streaming-inference hooks --------------------------
+# (protocol in models/gnn/common.py; orchestration in repro/infer/stream.py)
+
+def infer_n_layers(params) -> int:
+    return len(params["self"])
+
+
+def infer_spmm_dims(params, feat_dim: int) -> list[int]:
+    # layer l's SpMM_MEAN consumes H^l itself: dim = layer input width
+    return [feat_dim] + [p["w"].shape[1]
+                         for p in params["self"][:-1]]
+
+
+def infer_init(params, feats):
+    return np.asarray(feats, np.float32), None
+
+
+def infer_pre(params, l: int):
+    return None         # SpMM input is H^l itself
+
+
+def infer_post(params, l: int, m, h, ctx, valid, bn_stats=None):
+    hp = (C.np_dense(params["self"][l], h)
+          + C.np_dense(params["neigh"][l], m)).astype(np.float32)
+    if l == len(params["self"]) - 1:
+        return hp, None
+    if params["bn"][l] is not None:
+        hp, bn_stats = C.np_batchnorm(params["bn"][l], hp, valid, bn_stats)
+    return np.maximum(hp, 0.0).astype(np.float32), bn_stats
+
+
+def infer_out(params, h, ctx):
+    return h
 
 
 def apply(params, ops: C.GraphOperands, taps: dict, plans: dict | None,

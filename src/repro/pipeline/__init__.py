@@ -8,7 +8,9 @@ from repro.pipeline.minibatch_loop import (MinibatchConfig, MinibatchTrainer,
                                            tune_buckets)
 from repro.pipeline.partition import (Bucket, HostSubgraph, PoolConfig,
                                       SubgraphPool, build_pool,
-                                      ldg_partition, make_buckets)
+                                      contiguous_block_partition,
+                                      ldg_block_partition, ldg_partition,
+                                      make_buckets)
 from repro.pipeline.plan_pool import PlanCachePool, PoolPlanStats
 from repro.pipeline.prefetch import Prefetcher, device_operands
 from repro.pipeline.sharding import (ShardedPlanner, ShardedPoolSource,
@@ -18,7 +20,8 @@ __all__ = [
     "Bucket", "HostSubgraph", "MinibatchConfig", "MinibatchTrainer",
     "PlanCachePool", "PoolConfig", "PooledPlanner", "PooledSource",
     "PoolPlanStats", "Prefetcher", "ShardedPlanner", "ShardedPoolSource",
-    "SubgraphPool", "build_pool", "device_operands", "ldg_partition",
+    "SubgraphPool", "build_pool", "contiguous_block_partition",
+    "device_operands", "ldg_block_partition", "ldg_partition",
     "make_buckets", "minibatch_engine", "pooled_evaluate",
     "shard_pool_ids", "stacked_operands", "tune_buckets",
 ]

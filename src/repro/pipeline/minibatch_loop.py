@@ -47,8 +47,10 @@ class MinibatchConfig(TrainConfig):
     """TrainConfig + pool/prefetch/data-parallel knobs.
 
     ``epochs`` = passes over the pool. ``dp > 1`` shards the pool across a
-    ``("data",)`` mesh of that many devices (forces a single shape bucket)
-    and all-reduces gradients each step; ``compress_grads`` routes the
+    ``("data",)`` mesh of that many devices and all-reduces gradients each
+    step; multi-bucket pools work under DP via bucket-grouped stacking
+    (every bucket must split evenly across shards — each step stacks one
+    SAME-bucket subgraph per device). ``compress_grads`` routes the
     all-reduce through the int8 error-feedback compressor.
     """
 
@@ -172,6 +174,12 @@ class PooledPlanner:
     def k_latest(self):
         return None
 
+    def state_dict(self):
+        return self.plan_pool.state_dict()
+
+    def load_state_dict(self, state) -> None:
+        self.plan_pool.load_state_dict(state)
+
 
 class PooledSource:
     """Prefetched subgraph-pool batches: one subgraph per step."""
@@ -191,14 +199,25 @@ class PooledSource:
     def warmup(self, cfg, dims, n_classes) -> None:
         tune_buckets(self.pool, cfg, dims, n_classes)
 
-    def batches(self, epoch: int):
+    def batches(self, epoch: int, skip: int = 0):
         cfg = self.cfg
+        # The full permutation is ALWAYS drawn (the RNG stream must advance
+        # identically whether or not a resume skips a prefix); ``skip``
+        # only trims what is uploaded and yielded.
+        order = self._order_rng.permutation(len(self.pool))[skip:]
         fetch = Prefetcher(
-            self.pool, self._order_rng.permutation(len(self.pool)),
+            self.pool, order,
             depth=cfg.prefetch_depth, enabled=cfg.prefetch,
             resident=cfg.resident, cache=self._device_cache)
         for sid, ops in fetch:
             yield int(sid), ops
+
+    def state_dict(self):
+        return {"order_rng": self._order_rng.bit_generator.state}
+
+    def load_state_dict(self, state) -> None:
+        if state is not None:
+            self._order_rng.bit_generator.state = state["order_rng"]
 
     def evaluate(self, eval_fn, mfn, params) -> tuple[float, float]:
         cfg = self.cfg
@@ -235,8 +254,18 @@ def minibatch_engine(cfg: MinibatchConfig, graph: GraphData | None = None,
     if pool is None:
         if graph is None:
             raise ValueError("need a graph or a prebuilt pool")
-        pool = _build_default_pool(
-            cfg, graph, n_buckets=1 if dp > 1 else cfg.n_buckets)
+        pool = _build_default_pool(cfg, graph, n_buckets=cfg.n_buckets)
+        # Bucket-grouped stacking needs every bucket to split evenly
+        # across shards; if this pool's bucket sizes don't, rebuild
+        # single-bucket rather than fail (prebuilt pools must comply).
+        # A pool size not divisible by dp is a USER error no rebuild can
+        # fix — leave it to surface downstream with its own message.
+        if dp > 1 and cfg.n_buckets > 1 and len(pool) % dp == 0:
+            from repro.pipeline.sharding import shard_pool_ids
+            try:
+                shard_pool_ids(pool, dp)
+            except ValueError:
+                pool = _build_default_pool(cfg, graph, n_buckets=1)
     if module.uses_mean_agg() != pool.mean_agg:
         raise ValueError(
             f"pool built with mean_agg={pool.mean_agg} but model "
@@ -259,14 +288,14 @@ def minibatch_engine(cfg: MinibatchConfig, graph: GraphData | None = None,
             mesh=mesh) if cfg.rsc else None
         return Engine(cfg, source, planner=planner, mesh=mesh,
                       compress_grads=cfg.compress_grads,
-                      compress_block=cfg.compress_block)
+                      compress_block=cfg.compress_block, graph=graph)
 
     source = PooledSource(pool, cfg)
     planner = PooledPlanner(
         pool, names, dims, budget_frac=cfg.budget,
         step_frac=cfg.step_frac, strategy=cfg.strategy,
         refresh_every=refresh) if cfg.rsc else None
-    return Engine(cfg, source, planner=planner)
+    return Engine(cfg, source, planner=planner, graph=graph)
 
 
 class MinibatchTrainer:

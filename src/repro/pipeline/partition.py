@@ -133,6 +133,75 @@ def ldg_partition(adj: CSR, n_parts: int,
             for i in range(n_parts) if (part == i).any()]
 
 
+def contiguous_block_partition(
+    row_ptr: np.ndarray,
+    *,
+    bm: int,
+    bk: int,
+    d: int,
+    n_parts: int | None = None,
+    budget_bytes: int | None = None,
+) -> list[np.ndarray]:
+    """Split row blocks of a tiled operand into contiguous partitions.
+
+    Used by the streaming inference engine (``repro/infer/stream.py``):
+    each partition's SpMM must fit the device-memory budget, estimated per
+    row block ``r`` as tiles(r)·(bm·bk + bk·d)·4 bytes (the tiles plus a
+    worst-case one-gathered-column-block-per-tile dense slab) plus the
+    bm·d·4-byte output rows. ``n_parts`` overrides the budget with an even
+    split. Returns a list of sorted row-block id arrays covering
+    ``[0, n_row_blocks)``.
+    """
+    n_rb = row_ptr.shape[0] - 1
+    if n_rb <= 0:
+        return [np.arange(max(n_rb, 0), dtype=np.int64)]
+    if n_parts is not None:
+        n_parts = max(1, min(int(n_parts), n_rb))
+        return [p.astype(np.int64) for p in
+                np.array_split(np.arange(n_rb, dtype=np.int64), n_parts)]
+    if budget_bytes is None:
+        return [np.arange(n_rb, dtype=np.int64)]
+    tiles = np.diff(row_ptr).astype(np.int64)
+    cost = tiles * (bm * bk + bk * d) * 4 + bm * d * 4
+    parts: list[np.ndarray] = []
+    start, acc = 0, 0
+    for r in range(n_rb):
+        if r > start and acc + cost[r] > budget_bytes:
+            parts.append(np.arange(start, r, dtype=np.int64))
+            start, acc = r, 0
+        acc += cost[r]
+    parts.append(np.arange(start, n_rb, dtype=np.int64))
+    return parts
+
+
+def ldg_block_partition(row_ids: np.ndarray, col_ids: np.ndarray,
+                        n_blocks: int, n_parts: int,
+                        seed: int = 0) -> list[np.ndarray]:
+    """LDG partition of ROW BLOCKS by tile connectivity.
+
+    Builds the block-level connectivity graph (row block r ~ col block c
+    whenever a tile (r, c) exists, symmetrized) and reuses
+    :func:`ldg_partition` on it, so row blocks that share column blocks land
+    in the same partition — fewer distinct column blocks to gather per
+    streaming-inference partition. Partitions come back sorted.
+    """
+    if n_parts <= 1 or n_blocks <= 1:
+        return [np.arange(n_blocks, dtype=np.int64)]
+    rows = np.concatenate([row_ids.astype(np.int64),
+                           col_ids.astype(np.int64)])
+    cols = np.concatenate([col_ids.astype(np.int64),
+                           row_ids.astype(np.int64)])
+    keep = rows != cols            # self-edges carry no grouping signal
+    key = rows * n_blocks + cols
+    _, idx = np.unique(key, return_index=True)
+    idx = idx[keep[idx]]
+    adj = CSR.from_coo(rows[idx], cols[idx],
+                       np.ones(idx.shape[0], np.float32),
+                       (n_blocks, n_blocks))
+    parts = ldg_partition(adj, n_parts, np.random.default_rng(seed))
+    return [np.sort(p) for p in parts]
+
+
 def make_buckets(shapes: list[tuple[int, int]],
                  n_buckets: int) -> tuple[list[Bucket], np.ndarray]:
     """Group subgraph shapes into ≤ n_buckets padded shapes.

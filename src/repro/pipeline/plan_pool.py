@@ -69,6 +69,10 @@ class PlanCachePool:
         self.stats = PoolPlanStats()
         self._visits_since_refresh: dict[int, int] = {}
         self._last_norms: dict[int, dict[str, np.ndarray]] = {}
+        # norms each cache's CURRENT plans were refreshed from (None while
+        # still on the exact bootstrap plans) — replaying them reproduces
+        # the plans exactly, which is what step-exact resume needs.
+        self._refresh_norms: dict[int, dict[str, np.ndarray] | None] = {}
 
     # ------------------------------------------------------------------
     def _build(self, sub: HostSubgraph) -> PlanCache:
@@ -102,6 +106,7 @@ class PlanCachePool:
                 cache.stats.refreshes == 0
                 or self._visits_since_refresh[sid] >= self.refresh_every):
             cache.refresh(self._last_norms[sid])
+            self._refresh_norms[sid] = self._last_norms[sid]
             self._visits_since_refresh[sid] = 0
             self.stats.refreshes += 1
         else:
@@ -115,6 +120,42 @@ class PlanCachePool:
         clock expiry refreshes from them."""
         self._last_norms[sub_id] = {k: np.asarray(v)
                                     for k, v in norms.items()}
+
+    # ------------------------------------------------------------------
+    def state_dict(self) -> dict:
+        """Per-subgraph clocks + the norms behind the current plans.
+
+        The allocator is a pure function of its refresh norms, so a
+        resumed pool rebuilds bit-identical plans by replaying them (the
+        hit/refresh counters are diagnostics and are restored only as far
+        as the bootstrap logic needs — ``cache.stats.refreshes``).
+        """
+        return {
+            int(sid): {
+                "visits": self._visits_since_refresh.get(sid, 0),
+                "refreshes": self.caches[sid].stats.refreshes,
+                "refresh_norms": self._refresh_norms.get(sid),
+                "last_norms": self._last_norms.get(sid),
+            }
+            for sid in self.caches
+        }
+
+    def load_state_dict(self, state: dict | None) -> None:
+        if not state:
+            return
+        by_id = {s.sub_id: s for s in self.pool.subgraphs}
+        for sid, st in state.items():
+            sid = int(sid)
+            cache = self._build(by_id[sid])
+            if st.get("refresh_norms") is not None:
+                cache.refresh(st["refresh_norms"])
+                self._refresh_norms[sid] = st["refresh_norms"]
+            cache.stats.refreshes = st.get("refreshes",
+                                           cache.stats.refreshes)
+            self.caches[sid] = cache
+            self._visits_since_refresh[sid] = st.get("visits", 0)
+            if st.get("last_norms") is not None:
+                self._last_norms[sid] = st["last_norms"]
 
     # ------------------------------------------------------------------
     def flops_fraction(self) -> float:

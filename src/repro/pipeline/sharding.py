@@ -9,9 +9,11 @@ leading device axis and feeds the batch to the engine's
 refresh clocks, refreshed from that shard's own gradient row norms, which
 come back stacked ``(n_shards, n_pad)`` from the DP step.
 
-Sharded pools require a single shape bucket: the per-device operands of one
-step are stacked into one array, so every subgraph must share the bucket's
-static shape (the factory forces ``n_buckets=1``).
+Per-device operands of one step are stacked into one array, so the step's
+subgraphs must share a static shape — but the POOL may keep multiple shape
+buckets: shards are split per bucket and every step draws one SAME-bucket
+subgraph per device (bucket-grouped stacking), preserving the minibatch
+pipeline's O(#buckets) compile count under data parallelism.
 """
 from __future__ import annotations
 
@@ -30,17 +32,27 @@ from repro.sparse.bcoo import BlockCOO, HostBlockCOO, host_row_ptr
 
 
 def shard_pool_ids(pool: SubgraphPool, n_shards: int) -> list[list[int]]:
-    """Round-robin partition of subgraph ids into equal-size shards."""
+    """Round-robin partition of subgraph ids into equal-size shards,
+    PER BUCKET: every shard receives the same number of subgraphs from
+    each shape bucket, so any step can stack one same-bucket subgraph per
+    device (bucket-grouped stacking — multi-bucket pools keep their
+    O(#buckets) compile savings under data parallelism)."""
     if len(pool) % n_shards != 0:
         raise ValueError(
             f"pool size {len(pool)} not divisible by {n_shards} shards; "
             "choose n_subgraphs as a multiple of the data-parallel degree")
-    if len(pool.buckets) != 1:
-        raise ValueError(
-            "sharded pools require a single shape bucket (n_buckets=1): "
-            "per-device operands are stacked into one array")
-    ids = list(range(len(pool)))
-    return [ids[d::n_shards] for d in range(n_shards)]
+    shards: list[list[int]] = [[] for _ in range(n_shards)]
+    for b in range(len(pool.buckets)):
+        ids = [s.sub_id for s in pool.subgraphs if s.bucket_id == b]
+        if len(ids) % n_shards != 0:
+            raise ValueError(
+                f"bucket {b} holds {len(ids)} subgraphs, not divisible by "
+                f"{n_shards} shards; sharded stacking draws one SAME-bucket "
+                "subgraph per device each step, so every bucket must split "
+                "evenly (raise n_subgraphs or lower n_buckets)")
+        for d in range(n_shards):
+            shards[d].extend(ids[d::n_shards])
+    return shards
 
 
 def _stack_host_bcoo(props: list[HostBlockCOO]) -> BlockCOO:
@@ -167,6 +179,17 @@ class ShardedPlanner:
     def per_shard_summary(self) -> list[dict]:
         return [p.summary() for p in self.pools]
 
+    def state_dict(self):
+        return [p.state_dict() for p in self.pools]
+
+    def load_state_dict(self, state) -> None:
+        if not state:
+            return
+        for p, st in zip(self.pools, state):
+            p.load_state_dict(st)
+        self._stacked.clear()
+        self._stacked_version = -1
+
 
 class ShardedPoolSource:
     """Data source yielding device-stacked batches, one subgraph per shard.
@@ -204,20 +227,45 @@ class ShardedPoolSource:
         tune_buckets(self.pool, cfg, dims, n_classes)
 
     def epoch_schedule(self, epoch: int) -> list[tuple[int, ...]]:
-        perms = [self._order_rng.permutation(ids) for ids in self.shards]
-        return [tuple(int(p[t]) for p in perms)
-                for t in range(self.steps_per_epoch)]
+        """Bucket-grouped step schedule: every step's per-shard subgraphs
+        come from the SAME shape bucket (they stack into one device-axis
+        array), with a shared shuffled bucket sequence and independent
+        per-shard orders within each bucket. Single-bucket pools reduce to
+        plain per-shard permutations."""
+        rng = self._order_rng
+        buckets = list(range(len(self.pool.buckets)))
+        sub = self.pool.subgraphs
+        per_shard = []
+        for ids in self.shards:
+            per_shard.append({
+                b: [int(x) for x in rng.permutation(
+                    [i for i in ids if sub[i].bucket_id == b]).tolist()]
+                for b in buckets})
+        counts = [len(per_shard[0][b]) for b in buckets]
+        seq = rng.permutation(np.repeat(buckets, counts))
+        return [tuple(per_shard[d][int(b)].pop()
+                      for d in range(len(self.shards)))
+                for b in seq]
 
-    def batches(self, epoch: int):
+    def batches(self, epoch: int, skip: int = 0):
         cfg = self.cfg
+        # Draw the FULL schedule so the RNG stream advances identically
+        # under resume; ``skip`` trims the uploaded prefix only.
         fetch = Prefetcher(
-            self.pool, self.epoch_schedule(epoch),
+            self.pool, self.epoch_schedule(epoch)[skip:],
             depth=cfg.prefetch_depth, enabled=cfg.prefetch,
             resident=cfg.resident, cache=self._device_cache,
             fetch=lambda sids: stacked_operands(
                 self.pool, [self.pool.subgraphs[i] for i in sids],
                 self.mesh))
         yield from fetch
+
+    def state_dict(self):
+        return {"order_rng": self._order_rng.bit_generator.state}
+
+    def load_state_dict(self, state) -> None:
+        if state is not None:
+            self._order_rng.bit_generator.state = state["order_rng"]
 
     def evaluate(self, eval_fn, mfn, params) -> tuple[float, float]:
         return self._pooled_evaluate(

@@ -69,8 +69,17 @@ class TrainConfig:
     backend: str = "jnp"
     block: int = 128             # bm == bk
     degree_sort: bool = True
+    # Evaluation: "auto" keeps the source's evaluator (dense full-graph /
+    # pooled dedup); "stream" swaps in exact streaming full-graph inference
+    # (repro/infer) — under minibatch training this makes the reported
+    # accuracy an exact full-graph measurement instead of a pool estimate.
+    eval_mode: str = "auto"
+    stream_partitions: int = 0       # 0 = size by stream_budget_mb
+    stream_budget_mb: float = 256.0
     # Checkpointing (optional): save (params, opt_state) every N global
-    # steps to ckpt_dir; Engine.restore() warm-starts from the latest.
+    # steps to ckpt_dir. Engine.restore() resumes STEP-EXACTLY when the
+    # checkpoint carries engine state (planner clocks, pool cursor, RNG
+    # key), and falls back to a warm start otherwise.
     ckpt_dir: str | None = None
     ckpt_every: int = 0
 
@@ -108,6 +117,12 @@ class NullPlanner:
     def k_latest(self):
         return None
 
+    def state_dict(self):
+        return None
+
+    def load_state_dict(self, state) -> None:
+        pass
+
 
 class FullGraphPlanner:
     """One :class:`PlanCache` refreshed on the global schedule clock from
@@ -124,10 +139,12 @@ class FullGraphPlanner:
         for n in names:
             self.cache.register(n, at, meta, dims[n], fro)
         self._last_norms: dict[str, np.ndarray] | None = None
+        self._refresh_norms: dict[str, np.ndarray] | None = None
 
     def plans_for(self, tag, step: int, schedule: RSCSchedule):
         if self._last_norms is not None and schedule.refresh_due(step):
             self.cache.refresh(self._last_norms)
+            self._refresh_norms = self._last_norms
         return self.cache.plans()
 
     def record(self, tag, norms) -> None:
@@ -145,6 +162,24 @@ class FullGraphPlanner:
     def k_latest(self):
         kh = self.cache.stats.k_history
         return kh[-1] if kh else None
+
+    def state_dict(self):
+        """Everything a resumed run needs to rebuild the current plans:
+        the allocator is a pure function of its latest refresh norms, so
+        replaying them reproduces the plans exactly."""
+        return {"last_norms": self._last_norms,
+                "refresh_norms": self._refresh_norms,
+                "refreshes": self.cache.stats.refreshes}
+
+    def load_state_dict(self, state) -> None:
+        if state is None:
+            return
+        if state.get("refresh_norms") is not None:
+            self.cache.refresh(state["refresh_norms"])
+            self._refresh_norms = state["refresh_norms"]
+        self.cache.stats.refreshes = state.get("refreshes",
+                                               self.cache.stats.refreshes)
+        self._last_norms = state.get("last_norms")
 
 
 # ---------------------------------------------------------------------------
@@ -179,6 +214,12 @@ class SingleDeviceRunner:
         return {"rsc": jit_compiles(self._rsc),
                 "exact": jit_compiles(self._exact),
                 "eval": jit_compiles(self._eval)}
+
+    def state_dict(self):
+        return None
+
+    def load_state_dict(self, state) -> None:
+        pass
 
 
 class DataParallelRunner:
@@ -249,6 +290,17 @@ class DataParallelRunner:
         return {"rsc": tot(self._rsc), "exact": tot(self._exact),
                 "eval": jit_compiles(self._eval)}
 
+    def state_dict(self):
+        """Error-feedback accumulators (compressed all-reduce state)."""
+        if self._err is None:
+            return None
+        return jax.tree.map(np.asarray, self._err)
+
+    def load_state_dict(self, state) -> None:
+        if state is not None:
+            import jax.numpy as jnp
+            self._err = jax.tree.map(jnp.asarray, state)
+
 
 # ---------------------------------------------------------------------------
 # Full-graph data source (pooled/sharded sources live in repro.pipeline).
@@ -277,8 +329,15 @@ class FullGraphSource:
     def warmup(self, cfg, dims, n_classes) -> None:
         pass
 
-    def batches(self, epoch: int):
-        yield None, self.ops
+    def batches(self, epoch: int, skip: int = 0):
+        if skip == 0:
+            yield None, self.ops
+
+    def state_dict(self):
+        return None
+
+    def load_state_dict(self, state) -> None:
+        pass
 
     def evaluate(self, eval_fn, mfn, params) -> tuple[float, float]:
         logits = np.asarray(eval_fn(params, self.ops))
@@ -306,7 +365,7 @@ class Engine:
 
     def __init__(self, cfg: TrainConfig, source, *, planner=None,
                  mesh=None, compress_grads: bool = False,
-                 compress_block: int = 128):
+                 compress_block: int = 128, graph=None):
         self.cfg = cfg
         self.source = source
         self.module = MODELS[cfg.model]
@@ -353,11 +412,30 @@ class Engine:
                 self.module, self.opt, dims, names,
                 dropout=cfg.dropout, backend=cfg.backend)
 
+        # Streaming full-graph evaluator (repro/infer): exact accuracy
+        # even when the source's own evaluator only covers pooled nodes.
+        self.stream_eval = None
+        if cfg.eval_mode == "stream":
+            if graph is None:
+                raise ValueError('eval_mode="stream" needs the full graph '
+                                 "(pass graph= to the engine factory)")
+            from repro.infer.stream import StreamConfig, StreamEvaluator
+            self.stream_eval = StreamEvaluator(
+                graph, cfg.model,
+                StreamConfig(
+                    block=cfg.block,
+                    n_partitions=cfg.stream_partitions or None,
+                    memory_budget_mb=(None if cfg.stream_partitions
+                                      else cfg.stream_budget_mb),
+                    backend=cfg.backend,
+                    degree_sort=cfg.degree_sort))
+
         self.ckpt = None
         self._ckpt_base = 0   # step offset after restore(): saved step
                               # numbers keep increasing across warm-starts
                               # so the checkpointer's keep-k GC never
                               # prefers a stale pre-restore snapshot
+        self._resume = None   # aux dict of an exact restore, one-shot
         if cfg.ckpt_dir:
             from repro.checkpoint.checkpointer import Checkpointer
             self.ckpt = Checkpointer(cfg.ckpt_dir)
@@ -367,20 +445,42 @@ class Engine:
             "mode": [], "k": [], "sub_id": [], "compress": []}
 
     # ------------------------------------------------------------------
-    def restore(self) -> int | None:
-        """Warm-start (params, opt_state) from the latest checkpoint.
+    def _capture_state(self, epoch: int, batch_idx: int, gstep: int, key,
+                       best: tuple[float, float]) -> dict:
+        """Engine state alongside a (params, opt_state) snapshot: enough
+        to make restore step-exact (planner clocks + refresh norms, pool
+        cursor via the epoch-start source RNG state, the live PRNG key)."""
+        return {
+            "gstep": gstep, "epoch": epoch, "batch_idx": batch_idx,
+            "key": np.asarray(key), "best": best,
+            "source": self._epoch_src_state,
+            "planner": self.planner.state_dict(),
+            "runner": self.runner.state_dict(),
+        }
 
-        Returns the checkpoint step, or None if there is none. This is a
-        WARM START, not exact resume: the step counter and the switch-back
-        schedule restart (source/planner state is not checkpointed — see
-        ROADMAP), but subsequent saves continue from the restored step
-        number so keep-k GC never resurrects a stale snapshot.
+    def restore(self, step: int | None = None) -> int | None:
+        """Restore (params, opt_state) from a checkpoint.
+
+        When the checkpoint carries engine state (saved by this engine's
+        own ``train`` loop), the restore is STEP-EXACT: the next ``train``
+        call continues mid-epoch with the saved RNG key, pool cursor and
+        plan-cache clocks, reproducing the uninterrupted trajectory.
+        Without aux state this degrades to the old warm start. Returns the
+        checkpoint step, or None if there is none.
         """
         if self.ckpt is None or self.ckpt.latest_step() is None:
             return None
         step, (self.params, self.opt_state) = self.ckpt.restore(
-            (self.params, self.opt_state))
-        self._ckpt_base = step
+            (self.params, self.opt_state), step=step)
+        aux = self.ckpt.load_aux(step)
+        if aux is not None:
+            self.planner.load_state_dict(aux.get("planner"))
+            self.runner.load_state_dict(aux.get("runner"))
+            self.source.load_state_dict(aux.get("source"))
+            self._resume = aux
+            self._ckpt_base = step - aux["gstep"]
+        else:
+            self._ckpt_base = step
         return step
 
     # ------------------------------------------------------------------
@@ -398,9 +498,24 @@ class Engine:
         mfn = metric_fn(cfg.metric)
         best_val, best_test = -1.0, -1.0
         gstep = 0
+        start_epoch, skip = 0, 0
+        self._epoch_src_state = None
+        if self._resume is not None:
+            # Step-exact continuation from restore(): re-enter the saved
+            # epoch at the saved batch cursor with the saved PRNG key. The
+            # source re-draws its epoch permutation from the restored
+            # epoch-start RNG state, so the skipped prefix is exactly the
+            # prefix the pre-checkpoint run consumed.
+            r, self._resume = self._resume, None
+            start_epoch, skip = r["epoch"], r["batch_idx"]
+            gstep = r["gstep"]
+            key = jax.numpy.asarray(r["key"])
+            best_val, best_test = r["best"]
 
-        for epoch in range(epochs):
-            for tag, ops in self.source.batches(epoch):
+        for epoch in range(start_epoch, epochs):
+            self._epoch_src_state = self.source.state_dict()
+            for bidx, (tag, ops) in enumerate(
+                    self.source.batches(epoch, skip=skip), start=skip):
                 key, sub = jax.random.split(key)
                 approx = self.schedule.use_rsc(gstep)
                 use_rsc = cfg.rsc and approx
@@ -435,8 +550,12 @@ class Engine:
                 gstep += 1
                 if (self.ckpt is not None and cfg.ckpt_every > 0
                         and gstep % cfg.ckpt_every == 0):
-                    self.ckpt.save(self._ckpt_base + gstep,
-                                   (self.params, self.opt_state))
+                    self.ckpt.save(
+                        self._ckpt_base + gstep,
+                        (self.params, self.opt_state),
+                        aux=self._capture_state(epoch, bidx + 1, gstep, key,
+                                                (best_val, best_test)))
+            skip = 0
 
             if epoch % eval_every == 0 or epoch == epochs - 1:
                 val, test = self.evaluate(mfn)
@@ -445,14 +564,23 @@ class Engine:
                 if val > best_val:
                     best_val, best_test = val, test
                 if verbose:
-                    print(f"epoch {epoch:4d} loss "
-                          f"{self.history['loss'][-1]:.4f} "
-                          f"val {val:.4f} test {test:.4f} "
-                          f"mode={self.history['mode'][-1]}")
+                    # the resumed tail of a finished run has no new steps
+                    loss_s = (f"{self.history['loss'][-1]:.4f} "
+                              if self.history["loss"] else "---- ")
+                    mode_s = (self.history["mode"][-1]
+                              if self.history["mode"] else "none")
+                    print(f"epoch {epoch:4d} loss {loss_s}"
+                          f"val {val:.4f} test {test:.4f} mode={mode_s}")
 
         if self.ckpt is not None:
-            self.ckpt.save(self._ckpt_base + gstep,
-                           (self.params, self.opt_state))
+            # Final snapshot represented as "last epoch fully consumed":
+            # resuming it replays the last epoch's (empty) batch tail, so
+            # the source RNG stream stays aligned if training continues.
+            self.ckpt.save(
+                self._ckpt_base + gstep, (self.params, self.opt_state),
+                aux=self._capture_state(
+                    max(epochs - 1, 0), self.source.steps_per_epoch, gstep,
+                    key, (best_val, best_test)))
             self.ckpt.wait()
 
         return {
@@ -470,6 +598,8 @@ class Engine:
     # ------------------------------------------------------------------
     def evaluate(self, mfn=None) -> tuple[float, float]:
         mfn = mfn or metric_fn(self.cfg.metric)
+        if self.stream_eval is not None:
+            return self.stream_eval.evaluate(self.params, mfn)
         return self.source.evaluate(self.runner.eval_logits, mfn,
                                     self.params)
 
@@ -483,4 +613,4 @@ def full_batch_engine(cfg: TrainConfig, graph: GraphData) -> Engine:
         at, meta, fro = source.planner_operand()
         planner = FullGraphPlanner(cfg, module, at, meta, fro,
                                    source.num_classes)
-    return Engine(cfg, source, planner=planner)
+    return Engine(cfg, source, planner=planner, graph=graph)

@@ -1,0 +1,277 @@
+"""Streaming full-graph inference & node serving: parity with the dense
+forward, partition/budget planning, RSC-sampled inference, engine
+integration, and incremental dirty-set recompute after edge updates."""
+import copy
+
+import jax
+import numpy as np
+import pytest
+
+from repro.graphs.synthetic import sbm_graph
+from repro.infer import NodeServer, StreamConfig, StreamingInference
+from repro.models.gnn import MODELS
+from repro.models.gnn.common import build_operands
+from repro.train.metrics import accuracy
+from repro.train.steps import make_gnn_grads
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return sbm_graph(n_nodes=500, n_clusters=5, avg_degree=10, feat_dim=16,
+                     seed=0)
+
+
+def _params(graph, model, layers, batchnorm=True, hidden=32, seed=0):
+    return MODELS[model].init(jax.random.PRNGKey(seed),
+                              graph.features.shape[1], hidden,
+                              graph.num_classes, layers, batchnorm)
+
+
+def _dense_logits(graph, model, layers, params, hidden=32):
+    module = MODELS[model]
+    ops, _ = build_operands(graph, bm=32, bk=32, degree_sort=True)
+    _, _, eval_logits = make_gnn_grads(
+        module, module.spmm_dims(layers, hidden, graph.num_classes),
+        module.spmm_names(layers), dropout=0.0, backend="jnp")
+    return np.asarray(jax.jit(eval_logits)(params, ops)), ops
+
+
+# ------------------------------- parity ------------------------------------
+
+@pytest.mark.parametrize("model,layers", [("gcn", 2), ("graphsage", 2),
+                                          ("gcnii", 3)])
+@pytest.mark.parametrize("n_parts", [1, 3, 5])
+def test_stream_matches_dense_forward(graph, model, layers, n_parts):
+    """Acceptance: streaming == dense full-graph forward to ≤1e-5, for all
+    three models, across partition counts incl. a non-divisible one (the
+    500-node graph tiles to 16 row blocks; 3 and 5 don't divide 16)."""
+    params = _params(graph, model, layers)
+    dense, _ = _dense_logits(graph, model, layers, params)
+    si = StreamingInference(graph, model, params, StreamConfig(
+        block=32, n_partitions=n_parts, memory_budget_mb=None))
+    assert si.n_partitions == n_parts
+    stream = si.forward()
+    np.testing.assert_allclose(stream[: graph.n], dense[: graph.n],
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_stream_memory_budget_partitions(graph):
+    """A small byte budget must split the graph into several partitions
+    without changing the result."""
+    params = _params(graph, "gcn", 2)
+    dense, _ = _dense_logits(graph, "gcn", 2, params)
+    si = StreamingInference(graph, "gcn", params, StreamConfig(
+        block=32, memory_budget_mb=0.25))
+    assert si.n_partitions >= 3
+    covered = np.concatenate([p.rbs for p in si._parts["exact"]])
+    assert np.array_equal(np.sort(covered),
+                          np.arange(si.host.n_row_blocks))
+    np.testing.assert_allclose(si.forward()[: graph.n], dense[: graph.n],
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_stream_ldg_partition_method(graph):
+    """Tile-connectivity (LDG) partitioning is a pure re-grouping: same
+    logits, full row-block cover, no block in two partitions."""
+    params = _params(graph, "gcn", 2)
+    dense, _ = _dense_logits(graph, "gcn", 2, params)
+    si = StreamingInference(graph, "gcn", params, StreamConfig(
+        block=32, n_partitions=4, memory_budget_mb=None,
+        partition_method="ldg"))
+    covered = np.concatenate([p.rbs for p in si._parts["exact"]])
+    assert np.array_equal(np.sort(covered),
+                          np.arange(si.host.n_row_blocks))
+    np.testing.assert_allclose(si.forward()[: graph.n], dense[: graph.n],
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_stream_repeated_forward_fresh_params(graph):
+    """Params ride as jit arguments: a second forward with different
+    params must produce different (correct) logits without retracing per
+    partition."""
+    p1 = _params(graph, "gcn", 2, seed=0)
+    p2 = _params(graph, "gcn", 2, seed=7)
+    si = StreamingInference(graph, "gcn", p1, StreamConfig(
+        block=32, n_partitions=3, memory_budget_mb=None))
+    out1 = si.forward(p1)
+    out2 = si.forward(p2)
+    dense2, _ = _dense_logits(graph, "gcn", 2, p2)
+    assert not np.allclose(out1, out2)
+    np.testing.assert_allclose(out2[: graph.n], dense2[: graph.n],
+                               rtol=1e-5, atol=1e-5)
+
+
+# --------------------------- RSC-sampled inference -------------------------
+
+def test_sampled_inference_bounded_error(graph):
+    """Smoke: RSC-sampled column gathers stay within a loose error bound
+    of the exact logits and actually shrink the gather."""
+    params = _params(graph, "gcn", 2)
+    si = StreamingInference(graph, "gcn", params, StreamConfig(
+        block=32, n_partitions=3, memory_budget_mb=None,
+        sample_budget=0.7))
+    exact = si.forward(sampled=False)[: graph.n]
+    sampled = si.forward(sampled=True)[: graph.n]
+    assert "sampled" in si._parts
+    # tighter shapes: fewer tiles and no larger gather
+    nb_e, s_e, g_e = si._pads["exact"]
+    nb_s, s_s, g_s = si._pads["sampled"]
+    assert s_s < s_e and g_s <= g_e
+    rel = (np.linalg.norm(sampled - exact)
+           / max(np.linalg.norm(exact), 1e-9))
+    assert rel < 0.5, rel
+    # most predictions survive the approximation
+    agree = (sampled.argmax(-1) == exact.argmax(-1)).mean()
+    assert agree > 0.75, agree
+
+
+# ----------------------------- engine integration --------------------------
+
+def test_engine_stream_eval_matches_dense_oracle(graph):
+    """Acceptance: Engine(eval_mode="stream") reports IDENTICAL accuracy
+    to a dense-forward oracle under minibatch training."""
+    from repro.pipeline import MinibatchConfig, MinibatchTrainer
+
+    cfg = MinibatchConfig(model="gcn", n_layers=2, hidden=32, epochs=3,
+                          block=32, dropout=0.2, rsc=False, seed=1,
+                          method="random_walk", n_subgraphs=4, roots=60,
+                          walk_length=3, n_buckets=2, prefetch=False,
+                          autotune=False, eval_mode="stream",
+                          stream_partitions=3)
+    tr = MinibatchTrainer(cfg, graph)
+    tr.train(eval_every=3)
+    sval, stest = tr.engine.evaluate()
+
+    logits, ops = _dense_logits(graph, "gcn", 2, tr.engine.params)
+    valid = np.arange(logits.shape[0]) < ops.n_valid
+    val = accuracy(logits, np.asarray(ops.labels),
+                   np.asarray(ops.val_mask) & valid)
+    test = accuracy(logits, np.asarray(ops.labels),
+                    np.asarray(ops.test_mask) & valid)
+    assert (sval, stest) == (val, test)
+
+
+def test_engine_stream_eval_requires_graph(graph):
+    from repro.train.engine import Engine, TrainConfig, FullGraphSource
+
+    cfg = TrainConfig(model="gcn", n_layers=2, hidden=16, block=32,
+                      eval_mode="stream")
+    source = FullGraphSource(graph, cfg, MODELS["gcn"])
+    with pytest.raises(ValueError, match="stream"):
+        Engine(cfg, source)
+
+
+# ------------------------------- serving -----------------------------------
+
+def _bfs_dirty(adj_old, adj_new, seeds, hops):
+    """Expected dirty set: closed ≤hops-neighborhood over old ∪ new."""
+    dirty = np.unique(np.asarray(seeds, np.int64))
+    for _ in range(hops):
+        nxt = [dirty]
+        for adj in (adj_old, adj_new):
+            for u in dirty:
+                nxt.append(adj.col[adj.rowptr[u]: adj.rowptr[u + 1]]
+                           .astype(np.int64))
+        dirty = np.unique(np.concatenate(nxt))
+    return dirty
+
+
+def test_server_query_matches_full_forward(graph):
+    params = _params(graph, "gcn", 2)
+    srv = NodeServer(graph, "gcn", params, StreamConfig(
+        block=32, n_partitions=3, memory_budget_mb=None))
+    ids = np.asarray([0, 7, 123, 499, 7])
+    out = srv.query(ids)
+    si = StreamingInference(graph, "gcn", params, StreamConfig(
+        block=32, n_partitions=1, memory_budget_mb=None))
+    full = si.forward()
+    np.testing.assert_allclose(out, full[si.pos[ids]], rtol=1e-5,
+                               atol=1e-6)
+    with pytest.raises(IndexError):
+        srv.query([graph.n])
+    assert srv.predict(ids).shape == (5,)
+
+
+def test_server_incremental_recompute_exact_dirty_set(graph):
+    """Acceptance: after an edge insert the server recomputes EXACTLY the
+    dirty ≤L-hop set — clean cached rows stay bit-identical, the dirty set
+    equals the BFS expectation, and the refreshed logits match a fresh
+    full streaming pass over the updated graph."""
+    layers = 2
+    params = _params(graph, "gcn", layers, batchnorm=False)
+    cfg = StreamConfig(block=32, n_partitions=3, memory_budget_mb=None)
+    srv = NodeServer(graph, "gcn", params, cfg)
+    logits0 = srv.si.logits.copy()
+
+    # a non-adjacent pair, mapped through the degree-sort permutation
+    adj = graph.adj
+    u = 11
+    nbrs = set(adj.col[adj.rowptr[u]: adj.rowptr[u + 1]].tolist())
+    v = next(x for x in range(graph.n) if x != u and x not in nbrs)
+    old_local_adj = srv.si.adj
+    stats = srv.update_edges(add=[(u, v)])
+    assert stats["edges"] == 1
+
+    # exact dirty set (local space): closed L-hop BFS from the endpoints
+    seeds = srv.si.pos[[u, v]]
+    expected = _bfs_dirty(old_local_adj, srv.si.adj, seeds, layers)
+    assert np.array_equal(np.sort(srv.last_dirty), expected)
+    assert stats["dirty_nodes"] == expected.shape[0]
+    assert stats["dirty_nodes"] < graph.n      # strictly partial recompute
+
+    # clean rows: untouched BIT-FOR-BIT
+    clean = np.setdiff1d(np.arange(srv.si.host.n_rows), srv.last_dirty)
+    assert np.array_equal(srv.si.logits[clean], logits0[clean])
+    # the edge endpoints genuinely changed
+    assert not np.allclose(srv.si.logits[srv.si.pos[u]],
+                           logits0[srv.si.pos[u]])
+
+    # refreshed cache == fresh full inference on the updated graph
+    g2 = copy.copy(graph)
+    from repro.infer.serve import _edit_csr
+    g2.adj = _edit_csr(graph.adj, np.asarray([[u, v]]),
+                       np.empty((0, 2), np.int64))
+    si2 = StreamingInference(g2, "gcn", params, cfg)
+    ref = si2.forward()
+    all_ids = np.arange(graph.n)
+    np.testing.assert_allclose(srv.query(all_ids), ref[si2.pos[all_ids]],
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_server_edge_removal_recompute(graph):
+    """Removals invalidate the OLD neighborhood too."""
+    params = _params(graph, "gcn", 2, batchnorm=False)
+    cfg = StreamConfig(block=32, n_partitions=2, memory_budget_mb=None)
+    srv = NodeServer(graph, "gcn", params, cfg)
+    adj = graph.adj
+    u = int(np.argmax(adj.row_nnz()))
+    v = int(adj.col[adj.rowptr[u]])
+    srv.update_edges(remove=[(u, v)])
+
+    g2 = copy.copy(graph)
+    from repro.infer.serve import _edit_csr
+    g2.adj = _edit_csr(graph.adj, np.empty((0, 2), np.int64),
+                       np.asarray([[u, v]]))
+    si2 = StreamingInference(g2, "gcn", params, cfg)
+    ref = si2.forward()
+    all_ids = np.arange(graph.n)
+    np.testing.assert_allclose(srv.query(all_ids), ref[si2.pos[all_ids]],
+                               rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------ partitioners --------------------------------
+
+def test_contiguous_block_partition_budget():
+    from repro.pipeline.partition import contiguous_block_partition
+
+    row_ptr = np.asarray([0, 4, 8, 10, 16, 20, 21, 25, 30], np.int32)
+    parts = contiguous_block_partition(row_ptr, bm=32, bk=32, d=64,
+                                       budget_bytes=6 * (32 * 32 + 32 * 64)
+                                       * 4)
+    assert len(parts) > 1
+    assert np.array_equal(np.concatenate(parts), np.arange(8))
+    # explicit n_parts overrides the budget
+    parts3 = contiguous_block_partition(row_ptr, bm=32, bk=32, d=64,
+                                        n_parts=3)
+    assert len(parts3) == 3
+    assert np.array_equal(np.concatenate(parts3), np.arange(8))

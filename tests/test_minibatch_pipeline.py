@@ -270,12 +270,42 @@ def test_shard_pool_ids_validation(graph):
     assert all(len(s) == 2 for s in shards)
     with pytest.raises(ValueError):
         shard_pool_ids(pool1, 3)          # 8 % 3 != 0
+    # Multi-bucket pools shard PER BUCKET (bucket-grouped stacking): every
+    # shard receives an equal slice of every bucket.
     pool2 = build_pool(graph, PoolConfig(n_subgraphs=8, roots=50,
                                          walk_length=3, block=32,
                                          n_buckets=2))
     if len(pool2.buckets) > 1:
-        with pytest.raises(ValueError):
-            shard_pool_ids(pool2, 4)      # multi-bucket pools can't stack
+        shards2 = shard_pool_ids(pool2, 4)
+        assert sorted(sum(shards2, [])) == list(range(8))
+        for b in range(len(pool2.buckets)):
+            per_shard = [sum(pool2.subgraphs[i].bucket_id == b
+                             for i in s) for s in shards2]
+            assert len(set(per_shard)) == 1, (b, per_shard)
+
+
+def test_bucket_grouped_epoch_schedule(graph):
+    """Sharded multi-bucket schedule: each step draws one SAME-bucket
+    subgraph per shard; an epoch covers the whole pool exactly once."""
+    import types
+
+    from repro.pipeline.sharding import ShardedPoolSource
+
+    pool = build_pool(graph, PoolConfig(n_subgraphs=8, roots=50,
+                                        walk_length=3, block=32,
+                                        n_buckets=2))
+    mesh = types.SimpleNamespace(shape={"data": 4})
+    cfg = types.SimpleNamespace(seed=0, prefetch=False, prefetch_depth=2,
+                                resident=0)
+    src = ShardedPoolSource(pool, cfg, mesh)
+    for epoch in range(3):
+        sched = src.epoch_schedule(epoch)
+        assert len(sched) == 2                    # 8 subgraphs / 4 shards
+        seen = [sid for step in sched for sid in step]
+        assert sorted(seen) == list(range(8))     # full pool, once
+        for step in sched:
+            bks = {pool.subgraphs[sid].bucket_id for sid in step}
+            assert len(bks) == 1, (step, bks)     # same-bucket stacking
 
 
 def test_graphsage_minibatch_runs(graph):
