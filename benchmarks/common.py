@@ -1,4 +1,10 @@
-"""Shared benchmark utilities."""
+"""Shared benchmark utilities.
+
+Timing policy (audited alongside ``repro.obs``): every benchmark measures
+with the monotonic ``time.perf_counter`` — never wall-clock ``time.time``,
+which NTP steps and suspend/resume can move backwards mid-interval and
+silently corrupt latency numbers.
+"""
 from __future__ import annotations
 
 import time

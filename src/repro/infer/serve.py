@@ -18,12 +18,13 @@
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import numpy as np
 
+from repro import obs
 from repro.graphs.synthetic import GraphData
 from repro.infer.stream import StreamConfig, StreamingInference
+from repro.obs.clock import GuardedClock
 from repro.sparse.csr import CSR
 
 
@@ -64,14 +65,19 @@ class NodeServer:
                  cfg: StreamConfig = StreamConfig()):
         cfg = dataclasses.replace(cfg, store_layers=True,
                                   sample_budget=None)
-        t0 = time.perf_counter()
+        # Monotonic clock with a negative-delta guard: serving metrics must
+        # never go backwards even if a timer source misbehaves; anomalies
+        # are counted, not silently folded into latencies.
+        self.clock = GuardedClock()
+        t0 = self.clock.now()
         self.si = StreamingInference(graph, model, params, cfg)
         self.si.forward(store=True)
-        self.build_seconds = time.perf_counter() - t0
+        self.build_seconds = self.clock.elapsed(t0)
         self.queries = 0
         self.query_seconds = 0.0
         self.updates = 0
         self.last_dirty: np.ndarray | None = None   # local rows, last update
+        obs.get_registry().gauge("serve.build_seconds", self.build_seconds)
 
     @property
     def n_nodes(self) -> int:
@@ -80,13 +86,17 @@ class NodeServer:
     # ------------------------------------------------------------- query
     def query(self, node_ids) -> np.ndarray:
         """Batched logits for original-graph node ids (cache read)."""
-        t0 = time.perf_counter()
+        t0 = self.clock.now()
         ids = np.asarray(node_ids, dtype=np.int64)
         if ids.size and (ids.min() < 0 or ids.max() >= self.n_nodes):
             raise IndexError(f"node ids must be in [0, {self.n_nodes})")
         out = self.si.logits[self.si.pos[ids]].copy()
+        dt = self.clock.elapsed(t0)
         self.queries += ids.size
-        self.query_seconds += time.perf_counter() - t0
+        self.query_seconds += dt
+        reg = obs.get_registry()
+        reg.observe("serve.query_ms", dt * 1e3)
+        reg.counter("serve.queries", float(ids.size))
         return out
 
     def predict(self, node_ids) -> np.ndarray:
@@ -125,7 +135,7 @@ class NodeServer:
         rather than looping; incremental re-tiling of only the touched
         row blocks is a recorded follow-up (see ROADMAP).
         """
-        t0 = time.perf_counter()
+        t0 = self.clock.now()
         add = np.asarray(list(add), dtype=np.int64).reshape(-1, 2)
         remove = np.asarray(list(remove), dtype=np.int64).reshape(-1, 2)
         if add.size + remove.size == 0:
@@ -145,6 +155,13 @@ class NodeServer:
         self.updates += 1
         self.last_dirty = dirty[-1]
         n_pad = self.si.host.n_rows
+        dt = self.clock.elapsed(t0)
+        reg = obs.get_registry()
+        reg.observe("serve.update_ms", dt * 1e3)
+        reg.counter("serve.updates")
+        reg.counter("serve.dirty_nodes", float(dirty[-1].shape[0]))
+        reg.observe("serve.dirty_frac",
+                    dirty[-1].shape[0] / max(self.n_nodes, 1))
         return {
             "edges": int(add.shape[0] + remove.shape[0]),
             "dirty_nodes": int(dirty[-1].shape[0]),
@@ -153,7 +170,7 @@ class NodeServer:
             "recomputed_row_frac": float(
                 np.unique(dirty[-1] // self.si.host.bm).shape[0]
                 * self.si.host.bm / n_pad),
-            "seconds": time.perf_counter() - t0,
+            "seconds": dt,
         }
 
     def stats(self) -> dict:
@@ -164,4 +181,5 @@ class NodeServer:
             "queries": self.queries,
             "query_seconds": round(self.query_seconds, 6),
             "updates": self.updates,
+            "clock_anomalies": self.clock.anomalies,
         }

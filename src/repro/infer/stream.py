@@ -39,7 +39,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.plan import SamplePlan
+from repro.obs.sentinel import jit_compiles
 from repro.core.rsc_spmm import spmm_apply
 from repro.graphs.synthetic import GraphData
 from repro.models.gnn import MODELS
@@ -344,23 +346,57 @@ class StreamingInference:
         self._layer_fns[key] = jitted
         return jitted
 
+    def compile_counts(self) -> dict[str, int]:
+        """Compiles per cached layer function — the streaming invariant is
+        ONE per ``(layer, mode)`` key, watched by the engine's sentinel."""
+        return {f"layer{l}/{mode}": (jit_compiles(fn) or 0)
+                for (l, mode), fn in self._layer_fns.items()}
+
     def _spmm_layer(self, l: int, h: np.ndarray, pre, mode: str,
                     parts: list[_Partition] | None = None,
                     d_out: int | None = None) -> np.ndarray:
         """SpMM(operand, pre(h)) for all rows covered by ``parts``."""
         parts = parts if parts is not None else self._parts[mode]
         fn = self._layer_fn(l, mode, pre)
+        bundle = obs.get_obs()
         out = None
-        for p in parts:
-            slab = np.ascontiguousarray(h[p.gather_rows])
-            res = fn(p.blocks, p.sel, p.row_ids, p.col_ids, p.row_ptr,
-                     jnp.asarray(p.n_active, jnp.int32), slab,
-                     pre[1] if pre is not None else {})
+        for i, p in enumerate(parts):
+            if bundle.enabled:
+                res = self._timed_partition(bundle, fn, l, mode, i, p, h, pre)
+            else:
+                slab = np.ascontiguousarray(h[p.gather_rows])
+                res = fn(p.blocks, p.sel, p.row_ids, p.col_ids, p.row_ptr,
+                         jnp.asarray(p.n_active, jnp.int32), slab,
+                         pre[1] if pre is not None else {})
             res = np.asarray(res)
             if out is None:
                 out = np.zeros((self.host.n_rows, res.shape[1]), np.float32)
             out[p.out_rows] = res[: p.n_rows]
         return out
+
+    def _timed_partition(self, bundle, fn, l: int, mode: str, i: int,
+                         p: _Partition, h: np.ndarray, pre):
+        """Instrumented partition step: splits host gather + host→device
+        upload from device compute (explicit ``device_put`` + blocking —
+        the un-instrumented path lets jit overlap them, so this split only
+        runs when observability is on)."""
+        reg, tracer = bundle.registry, bundle.tracer
+        with tracer.span("stream_partition", layer=l, mode=mode, part=i):
+            t0 = time.perf_counter()
+            slab = np.ascontiguousarray(h[p.gather_rows])
+            blocks_d, slab_d = jax.block_until_ready(
+                jax.device_put((p.blocks, slab)))
+            t1 = time.perf_counter()
+            res = jax.block_until_ready(
+                fn(blocks_d, p.sel, p.row_ids, p.col_ids, p.row_ptr,
+                   jnp.asarray(p.n_active, jnp.int32), slab_d,
+                   pre[1] if pre is not None else {}))
+            t2 = time.perf_counter()
+        reg.observe("stream.upload_ms", (t1 - t0) * 1e3,
+                    layer=str(l), mode=mode)
+        reg.observe("stream.compute_ms", (t2 - t1) * 1e3,
+                    layer=str(l), mode=mode)
+        return res
 
     # ------------------------------------------------------------ forward
     def forward(self, params=None, *, sampled: bool | None = None,
@@ -381,14 +417,16 @@ class StreamingInference:
         store = self.cfg.store_layers if store is None else store
         module = self.module
 
+        tracer = obs.get_tracer()
         h, ctx = module.infer_init(params, self.features)
         layers = [h.copy()] if store else None
         bn_stats: dict[int, tuple | None] = {}
         for l in range(self.n_layers):
-            pre = module.infer_pre(params, l)
-            p_out = self._spmm_layer(l, h, pre, mode)
-            h, st = module.infer_post(params, l, p_out, h, ctx,
-                                      self.valid, None)
+            with tracer.span("stream_layer", layer=l, mode=mode):
+                pre = module.infer_pre(params, l)
+                p_out = self._spmm_layer(l, h, pre, mode)
+                h, st = module.infer_post(params, l, p_out, h, ctx,
+                                          self.valid, None)
             bn_stats[l] = st
             if store:
                 layers.append(h.copy())
@@ -499,6 +537,8 @@ class StreamEvaluator:
         si = self.si
         val = mfn(logits, si.labels, si.val_mask & si.valid)
         test = mfn(logits, si.labels, si.test_mask & si.valid)
-        self.seconds += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self.seconds += dt
         self.evals += 1
+        obs.get_registry().observe("stream.eval_ms", dt * 1e3)
         return val, test

@@ -24,11 +24,17 @@ Cache file format (``RSC_AUTOTUNE_CACHE`` env var, default
 ``~/.cache/repro-rsc/spmm_autotune.json``)::
 
     {"version": 1,
-     "entries": {"<signature>": {"bd": 512, "chunk": 16, "us": 1234.5}}}
+     "entries": {"<signature>": {"bd": 512, "chunk": 16, "us": 1234.5,
+                                 "backend": "pallas_interpret",
+                                 "platform": "cpu", "device": "...",
+                                 "interpret": true}}}
 
-``us`` records the winning candidate's measured microseconds per call
-(provenance only). Unknown keys are preserved on rewrite; writes are
-atomic (tmp file + rename).
+``us`` records the winning candidate's measured microseconds per call and
+``backend``/``platform``/``device``/``interpret`` where that timing came
+from — interpret-mode sweeps are provenance, not signal, and dispatch
+WARNS (and counts, via ``repro.obs``) when it serves an interpret-timed
+winner to a real hardware backend. Unknown keys are preserved on rewrite;
+writes are atomic (tmp file + rename).
 """
 from __future__ import annotations
 
@@ -37,9 +43,12 @@ import json
 import os
 import time
 import uuid
+import warnings
 from pathlib import Path
 
 import numpy as np
+
+from repro import obs
 
 CHUNK_CANDIDATES = (8, 16, 32, 64, 128)
 BD_CANDIDATES = (128, 256, 512)
@@ -68,6 +77,20 @@ class TuneStats:
     hits: int = 0        # lookups/get_or_tune served from the cache
     defaults: int = 0    # lookups answered with the heuristic default
     sweeps: int = 0      # actual timing sweeps run
+    interpret_served: int = 0   # interpret-swept entries served to a
+                                # real hardware backend (suspect signal)
+
+
+def _current_platform() -> str:
+    """Platform of the default jax device (lazy — import cost only when a
+    provenance check actually needs it)."""
+    import jax
+    return jax.devices()[0].platform
+
+
+def _current_device_kind() -> str:
+    import jax
+    return getattr(jax.devices()[0], "device_kind", "unknown")
 
 
 def _pow2_ceil(x: int) -> int:
@@ -103,6 +126,7 @@ class AutotuneCache:
         self.entries: dict[str, dict] = {}
         self.stats = TuneStats()
         self._loaded = False
+        self._warned: set[str] = set()   # interpret-served warn-once keys
 
     def _load(self) -> None:
         if self._loaded:
@@ -169,15 +193,34 @@ class AutotuneCache:
         e = self.entries.get(sig)
         if e is None:
             return None
+        # Provenance check: a REAL-pallas dispatch ("pallas|..." signature
+        # only exists on actual TPU hardware) being served a winner whose
+        # sweep ran in interpret mode. The config is still usable but its
+        # timing told us nothing about hardware — warn once per signature
+        # and count it, so benchmark provenance stays honest.
+        if e.get("interpret") and sig.split("|", 1)[0] == "pallas":
+            self.stats.interpret_served += 1
+            obs.get_registry().counter("autotune.interpret_served")
+            if sig not in self._warned:
+                self._warned.add(sig)
+                warnings.warn(
+                    f"autotune cache entry for {sig!r} was swept in "
+                    f"interpret mode (on {e.get('platform', '?')}); its "
+                    "timing is not hardware signal — re-sweep on this "
+                    "backend (delete the entry or point RSC_AUTOTUNE_CACHE "
+                    "at a fresh file)", RuntimeWarning, stacklevel=3)
         return SpmmConfig(bd=int(e.get("bd", DEFAULT_BD)),
                           chunk=int(e.get("chunk", DEFAULT_CHUNK)),
                           source="cache")
 
     def put(self, sig: str, cfg: SpmmConfig, us: float,
-            persist: bool = True) -> None:
+            persist: bool = True,
+            provenance: dict | None = None) -> None:
         self._load()
-        self.entries[sig] = {"bd": cfg.bd, "chunk": cfg.chunk,
-                             "us": round(us, 2)}
+        entry = {"bd": cfg.bd, "chunk": cfg.chunk, "us": round(us, 2)}
+        if provenance:
+            entry.update(provenance)
+        self.entries[sig] = entry
         if persist:
             self.save()
 
@@ -243,15 +286,22 @@ def get_or_tune(backend: str, *, bm: int, bk: int, d: int, s_pad: int,
     if cfg is not None:
         _cache.stats.hits += 1
         return cfg
-    cfg, us = _sweep(backend, bm=bm, bk=bk, d=d, s_pad=s_pad,
-                     n_row_blocks=n_row_blocks, n_col_blocks=n_col_blocks)
+    cfg, us, prov = _sweep(backend, bm=bm, bk=bk, d=d, s_pad=s_pad,
+                           n_row_blocks=n_row_blocks,
+                           n_col_blocks=n_col_blocks)
     _cache.stats.sweeps += 1
-    _cache.put(sig, cfg, us, persist=persist)
+    _cache.put(sig, cfg, us, persist=persist, provenance=prov)
+    reg = obs.get_registry()
+    reg.counter("autotune.sweeps", backend=backend)
+    reg.observe("autotune.sweep_us", us, backend=backend)
+    obs.get_tracer().instant("autotune_sweep", sig=sig, us=round(us, 1),
+                             interpret=prov["interpret"])
     return cfg
 
 
 def _sweep(backend: str, *, bm: int, bk: int, d: int, s_pad: int,
-           n_row_blocks: int, n_col_blocks: int) -> tuple[SpmmConfig, float]:
+           n_row_blocks: int, n_col_blocks: int,
+           ) -> tuple[SpmmConfig, float, dict]:
     """Time each candidate on synthetic operands of the bucket shape."""
     import jax.numpy as jnp
 
@@ -276,6 +326,7 @@ def _sweep(backend: str, *, bm: int, bk: int, d: int, s_pad: int,
                     .astype(np.float32))
 
     best: tuple[float, SpmmConfig] | None = None
+    interpret = False
     if backend == "jnp":
         import functools
 
@@ -307,4 +358,8 @@ def _sweep(backend: str, *, bm: int, bk: int, d: int, s_pad: int,
             cfg = SpmmConfig(bd=bd, chunk=DEFAULT_CHUNK, source="swept")
             if best is None or us < best[0]:
                 best = (us, cfg)
-    return best[1], best[0]
+    prov = {"backend": backend,
+            "platform": _current_platform(),
+            "device": _current_device_kind(),
+            "interpret": bool(interpret)}
+    return best[1], best[0], prov

@@ -20,6 +20,7 @@ import time
 import jax
 import numpy as np
 
+from repro import obs
 from repro.graphs.datasets import DATASETS, load_dataset
 from repro.infer import NodeServer, StreamConfig
 from repro.models.gnn import MODELS
@@ -88,7 +89,9 @@ def main():
     ap.add_argument("--update-edges", type=int, default=0,
                     help="insert N random edges and recompute dirty sets")
     ap.add_argument("--seed", type=int, default=0)
+    obs.add_cli_flags(ap)
     args = ap.parse_args()
+    obs.setup_from_args(args)
 
     graph = load_dataset(args.dataset, scale=args.scale, seed=args.seed)
     params = get_params(args, graph)
@@ -130,7 +133,11 @@ def main():
         "query_batches": n_batches,
         "queries_per_s": round(args.queries / max(query_s, 1e-9), 1),
         "updates": updates,
+        "serve_stats": server.stats(),
     }
+    snap = obs.finalize_from_args(args)
+    if snap is not None:
+        out["metrics"] = snap
     print(json.dumps(out))
 
 

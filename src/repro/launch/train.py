@@ -51,6 +51,7 @@ _maybe_force_host_devices()
 import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
+from repro import obs  # noqa: E402
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs import get_arch, make_batch, smoke_config
 from repro.graphs.datasets import DATASETS, load_dataset
@@ -62,6 +63,7 @@ from repro.train.optimizer import Adam
 
 
 def run_gnn(args) -> dict:
+    obs.setup_from_args(args)
     spec = DATASETS[args.dataset]
     g = load_dataset(args.dataset, scale=args.scale, seed=args.seed)
     common = dict(
@@ -72,7 +74,8 @@ def run_gnn(args) -> dict:
         strategy=args.strategy, block=args.block, seed=args.seed,
         backend=args.backend, eval_mode=args.eval_mode,
         stream_partitions=args.stream_partitions,
-        stream_budget_mb=args.stream_budget_mb)
+        stream_budget_mb=args.stream_budget_mb,
+        strict_compiles=args.strict_compiles)
     extra: dict = {}
     if (args.dp > 1 or args.mesh) and not args.minibatch:
         raise SystemExit("--dp/--mesh require --minibatch (the sharded "
@@ -120,6 +123,9 @@ def run_gnn(args) -> dict:
             extra["compress_grads"] = args.compress_grads
             if hasattr(planner, "per_shard_summary"):
                 extra["shards"] = planner.per_shard_summary()
+    snap = obs.finalize_from_args(args)
+    if snap is not None:
+        extra["metrics"] = snap
     print(json.dumps({
         "model": args.model, "dataset": args.dataset,
         "rsc": args.rsc, "budget": args.budget,
@@ -131,6 +137,7 @@ def run_gnn(args) -> dict:
 
 
 def run_lm(args) -> dict:
+    obs.setup_from_args(args)
     cfg = smoke_config(args.arch) if args.smoke else get_arch(args.arch)
     key = jax.random.PRNGKey(args.seed)
     params = init_params(key, cfg)
@@ -161,8 +168,12 @@ def run_lm(args) -> dict:
         ckpt.save(args.steps, (params, opt_state))
         ckpt.wait()
     assert np.isfinite(losses[-1])
-    print(json.dumps({"arch": cfg.name, "final_loss": losses[-1],
-                      "first_loss": losses[0], "steps": len(losses)}))
+    snap = obs.finalize_from_args(args)
+    out = {"arch": cfg.name, "final_loss": losses[-1],
+           "first_loss": losses[0], "steps": len(losses)}
+    if snap is not None:
+        out["metrics"] = snap
+    print(json.dumps(out))
     return {"losses": losses, "params": params}
 
 
@@ -227,6 +238,11 @@ def main():
                         "jax initializes)")
     g.add_argument("--seed", type=int, default=0)
     g.add_argument("--verbose", action="store_true")
+    g.add_argument("--strict-compiles", action="store_true",
+                   help="hard-fail (RetraceError) when a jitted step "
+                        "compiles more often than the one-compile-per-"
+                        "bucket invariant allows")
+    obs.add_cli_flags(g)
     g.set_defaults(fn=run_gnn)
 
     l = sub.add_parser("lm")
@@ -243,6 +259,7 @@ def main():
     l.add_argument("--ckpt-every", type=int, default=20)
     l.add_argument("--seed", type=int, default=0)
     l.add_argument("--verbose", action="store_true")
+    obs.add_cli_flags(l)
     l.set_defaults(fn=run_lm)
 
     args = ap.parse_args()

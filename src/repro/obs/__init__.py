@@ -1,0 +1,106 @@
+"""Unified telemetry: metrics registry, tracer, compile sentinel.
+
+Zero-dependency observability substrate for the whole stack. One
+process-wide :class:`Observability` bundle holds a
+:class:`~repro.obs.registry.MetricsRegistry` and a
+:class:`~repro.obs.trace.Tracer`, each independently enable-able:
+
+    from repro import obs
+    obs.configure(metrics=True, trace=True)
+    ...
+    obs.get_registry().snapshot()
+    obs.get_tracer().export_chrome("trace.json")
+
+Both default to DISABLED — every instrumentation site in the engine,
+pipeline, kernels and serving layers checks one attribute and returns,
+so the uninstrumented hot path pays (benchmarked in
+``benchmarks/obs_overhead.py``) well under 2%. Tests swap a fresh bundle
+in via :func:`reset`.
+"""
+from __future__ import annotations
+
+from repro.obs.clock import GuardedClock, perf_now
+from repro.obs.registry import MetricsRegistry
+from repro.obs.sentinel import CompileSentinel, RetraceError, jit_compiles
+from repro.obs.trace import Tracer
+
+__all__ = [
+    "CompileSentinel", "GuardedClock", "MetricsRegistry", "Observability",
+    "RetraceError", "Tracer", "add_cli_flags", "configure",
+    "finalize_from_args", "get_obs", "get_registry", "get_tracer",
+    "jit_compiles", "perf_now", "reset", "setup_from_args",
+]
+
+
+class Observability:
+    """A registry + tracer pair sharing one lifecycle."""
+
+    def __init__(self, metrics: bool = False, trace: bool = False):
+        self.registry = MetricsRegistry(enabled=metrics)
+        self.tracer = Tracer(enabled=trace)
+
+    @property
+    def enabled(self) -> bool:
+        return self.registry.enabled or self.tracer.enabled
+
+
+_obs = Observability()
+
+
+def get_obs() -> Observability:
+    return _obs
+
+
+def get_registry() -> MetricsRegistry:
+    return _obs.registry
+
+
+def get_tracer() -> Tracer:
+    return _obs.tracer
+
+
+def configure(metrics: bool | None = None,
+              trace: bool | None = None) -> Observability:
+    """Flip the process-wide enable flags (None = leave as is)."""
+    if metrics is not None:
+        _obs.registry.enabled = bool(metrics)
+    if trace is not None:
+        _obs.tracer.enabled = bool(trace)
+    return _obs
+
+
+def reset(metrics: bool = False, trace: bool = False) -> Observability:
+    """Swap in a fresh bundle (tests; also clears all recorded data)."""
+    global _obs
+    _obs = Observability(metrics=metrics, trace=trace)
+    return _obs
+
+
+# ------------------------------------------------------------------ CLI
+def add_cli_flags(parser) -> None:
+    """Attach the standard observability flags to an argparse parser."""
+    parser.add_argument("--metrics", action="store_true",
+                        help="enable the metrics registry and include its "
+                             "snapshot in the result JSON")
+    parser.add_argument("--trace-out", default=None, metavar="PATH",
+                        help="enable tracing; write a Chrome-trace JSON "
+                             "(open at ui.perfetto.dev or chrome://tracing)")
+    parser.add_argument("--trace-jsonl", default=None, metavar="PATH",
+                        help="enable tracing; write raw span records as "
+                             "JSONL (one event per line)")
+
+
+def setup_from_args(args) -> Observability:
+    """Flip the process-wide flags from parsed ``add_cli_flags`` args."""
+    return configure(metrics=bool(args.metrics),
+                     trace=bool(args.trace_out or args.trace_jsonl))
+
+
+def finalize_from_args(args) -> dict | None:
+    """Write the requested trace files; return the metrics snapshot
+    (``None`` when ``--metrics`` was not passed)."""
+    if args.trace_out:
+        _obs.tracer.export_chrome(args.trace_out)
+    if args.trace_jsonl:
+        _obs.tracer.write_jsonl(args.trace_jsonl)
+    return _obs.registry.snapshot() if args.metrics else None

@@ -1,0 +1,86 @@
+"""Compile/retrace sentinel: count jit cache misses, enforce invariants.
+
+The whole pipeline is built around compile-count invariants — one compile
+per shape bucket in minibatch training, one compile per layer in
+streaming inference — and a silently broken invariant turns into a
+10–100× slowdown that looks like "jax is slow". The sentinel makes the
+invariant a measured, optionally hard-failing property:
+
+* :func:`jit_compiles` reads a jitted function's tracing count;
+* :class:`CompileSentinel` watches named compile counters against
+  declared limits. ``check()`` publishes every count to the registry
+  (gauge ``jit.compiles{site=...}``), counts NEW traces since the last
+  check (counter ``jit.retraces``), and — with ``hard_fail`` — raises
+  :class:`RetraceError` naming the site the moment a limit is exceeded.
+
+Watch targets are zero-arg callables returning an int (or None when the
+count is unobservable on this jax version); pass a jitted function
+directly and it is wrapped via :func:`jit_compiles`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+class RetraceError(RuntimeError):
+    """A watched jit site compiled more often than its declared limit."""
+
+
+def jit_compiles(jitted) -> int | None:
+    """Number of tracings a jitted fn accumulated (None if unsupported)."""
+    try:
+        return int(jitted._cache_size())
+    except AttributeError:
+        return None
+
+
+@dataclasses.dataclass
+class _Watch:
+    fn: object            # zero-arg callable -> int | None
+    limit: int | None     # None = count only, never fail
+    last: int = 0         # count at the previous check
+
+
+class CompileSentinel:
+    """Named compile-counter watches with per-site limits."""
+
+    def __init__(self, registry=None, hard_fail: bool = False):
+        self.registry = registry
+        self.hard_fail = hard_fail
+        self._watches: dict[str, _Watch] = {}
+
+    def watch(self, site: str, target, limit: int | None = None) -> None:
+        """Watch ``target`` (jitted fn or zero-arg int callable) as
+        ``site``; ``limit`` is the maximum allowed lifetime compile count."""
+        fn = target if callable(target) and not hasattr(target, "lower") \
+            else (lambda t=target: jit_compiles(t))
+        self._watches[site] = _Watch(fn=fn, limit=limit)
+
+    def counts(self) -> dict[str, int | None]:
+        return {site: w.fn() for site, w in self._watches.items()}
+
+    def check(self, where: str = "") -> dict[str, int | None]:
+        """Read all watches, publish to the registry, enforce limits.
+
+        Returns the per-site counts. Raises :class:`RetraceError` (only
+        when ``hard_fail``) naming every site over its limit.
+        """
+        counts = self.counts()
+        over: list[str] = []
+        for site, n in counts.items():
+            w = self._watches[site]
+            if n is None:
+                continue
+            if self.registry is not None:
+                self.registry.gauge("jit.compiles", n, site=site)
+                if n > w.last:
+                    self.registry.counter("jit.retraces", n - w.last,
+                                          site=site)
+            w.last = n
+            if w.limit is not None and n > w.limit:
+                over.append(f"{site}: {n} compiles > limit {w.limit}")
+        if over and self.hard_fail:
+            at = f" at {where}" if where else ""
+            raise RetraceError(
+                f"compile invariant broken{at} — " + "; ".join(over))
+        return counts

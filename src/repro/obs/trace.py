@@ -1,0 +1,196 @@
+"""Structured tracing: nested spans → JSONL and Chrome-trace export.
+
+A :class:`Tracer` records **spans** (named, timed, nested regions — the
+step loop, one plan build, one partition upload) and **instants** (point
+events like "refresh" or "edge-update"). Spans nest per thread; each
+finished span carries its depth and parent name, so the JSONL stream is
+self-describing without an object graph.
+
+Two exports:
+
+* ``write_jsonl(path)`` — one JSON object per line, round-trippable via
+  ``read_jsonl`` (tests diff the two);
+* ``export_chrome(path)`` — the Chrome Trace Event format (open in
+  ``chrome://tracing`` or https://ui.perfetto.dev): spans become ``"X"``
+  complete events on per-thread tracks, instants become ``"i"`` events.
+
+Timestamps are monotonic (``perf_counter``) microseconds from the
+tracer's construction. The event buffer is bounded (``max_events``);
+overflow drops newest events and counts them in ``dropped`` so a
+truncated trace is never mistaken for a complete one.
+"""
+from __future__ import annotations
+
+import json
+import threading
+
+from repro.obs.clock import perf_now
+
+
+class _NullSpan:
+    """Reusable no-op span for a disabled tracer."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+    def set(self, **args) -> None:
+        pass
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class _Span:
+    __slots__ = ("_tracer", "name", "args", "_t0", "_depth", "_parent")
+
+    def __init__(self, tracer: "Tracer", name: str, args: dict):
+        self._tracer = tracer
+        self.name = name
+        self.args = args
+
+    def set(self, **args) -> None:
+        """Attach result attributes discovered while the span is open."""
+        self.args.update(args)
+
+    def __enter__(self):
+        stack = self._tracer._stack()
+        self._parent = stack[-1] if stack else None
+        self._depth = len(stack)
+        stack.append(self.name)
+        self._t0 = perf_now()
+        return self
+
+    def __exit__(self, *exc):
+        t1 = perf_now()
+        self._tracer._stack().pop()
+        self._tracer._record({
+            "kind": "span",
+            "name": self.name,
+            "ts_us": round((self._t0 - self._tracer._origin) * 1e6, 1),
+            "dur_us": round((t1 - self._t0) * 1e6, 1),
+            "depth": self._depth,
+            "parent": self._parent,
+            "tid": self._tracer._tid(),
+            "args": self.args,
+        })
+        return False
+
+
+class Tracer:
+    """Nested-span recorder with JSONL and Chrome-trace exporters."""
+
+    def __init__(self, enabled: bool = True, max_events: int = 200_000):
+        self.enabled = enabled
+        self.max_events = max_events
+        self.dropped = 0
+        self._origin = perf_now()
+        self._events: list[dict] = []
+        self._lock = threading.Lock()
+        self._local = threading.local()
+        self._tids: dict[int, int] = {}
+        self._tid_names: dict[int, str] = {}
+
+    # ------------------------------------------------------------ record
+    def _stack(self) -> list:
+        st = getattr(self._local, "stack", None)
+        if st is None:
+            st = self._local.stack = []
+        return st
+
+    def _tid(self) -> int:
+        ident = threading.get_ident()
+        tid = self._tids.get(ident)
+        if tid is None:
+            with self._lock:
+                tid = self._tids.setdefault(ident, len(self._tids))
+                self._tid_names[tid] = threading.current_thread().name
+        return tid
+
+    def _record(self, ev: dict) -> None:
+        with self._lock:
+            if len(self._events) >= self.max_events:
+                self.dropped += 1
+                return
+            self._events.append(ev)
+
+    def span(self, name: str, **args):
+        """``with tracer.span("step", step=3) as sp: ... sp.set(loss=x)``"""
+        if not self.enabled:
+            return _NULL_SPAN
+        return _Span(self, name, args)
+
+    def instant(self, name: str, **args) -> None:
+        if not self.enabled:
+            return
+        self._record({
+            "kind": "instant",
+            "name": name,
+            "ts_us": round((perf_now() - self._origin) * 1e6, 1),
+            "tid": self._tid(),
+            "args": args,
+        })
+
+    # ------------------------------------------------------------- reads
+    def snapshot(self) -> list[dict]:
+        with self._lock:
+            return [dict(ev) for ev in self._events]
+
+    def span_names(self) -> set[str]:
+        with self._lock:
+            return {ev["name"] for ev in self._events}
+
+    def reset(self) -> None:
+        with self._lock:
+            self._events.clear()
+            self.dropped = 0
+        self._origin = perf_now()
+
+    # ----------------------------------------------------------- exports
+    def write_jsonl(self, path) -> None:
+        events = self.snapshot()
+        with open(path, "w") as f:
+            for ev in events:
+                f.write(json.dumps(ev, sort_keys=True) + "\n")
+
+    @staticmethod
+    def read_jsonl(path) -> list[dict]:
+        out = []
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if line:
+                    out.append(json.loads(line))
+        return out
+
+    def export_chrome(self, path) -> None:
+        """Chrome Trace Event JSON (chrome://tracing / Perfetto)."""
+        events = self.snapshot()
+        with self._lock:
+            tid_names = dict(self._tid_names)
+        trace: list[dict] = [
+            {"ph": "M", "name": "thread_name", "pid": 0, "tid": tid,
+             "args": {"name": name}}
+            for tid, name in sorted(tid_names.items())
+        ]
+        for ev in events:
+            if ev["kind"] == "span":
+                trace.append({
+                    "ph": "X", "name": ev["name"], "cat": "repro",
+                    "pid": 0, "tid": ev["tid"],
+                    "ts": ev["ts_us"], "dur": ev["dur_us"],
+                    "args": ev["args"],
+                })
+            else:
+                trace.append({
+                    "ph": "i", "name": ev["name"], "cat": "repro",
+                    "pid": 0, "tid": ev["tid"], "ts": ev["ts_us"],
+                    "s": "t", "args": ev["args"],
+                })
+        with open(path, "w") as f:
+            json.dump({"traceEvents": trace, "displayTimeUnit": "ms",
+                       "otherData": {"dropped_events": self.dropped}}, f)

@@ -29,10 +29,12 @@ touches every training node exactly once, like classic minibatch SGD.
 from __future__ import annotations
 
 import dataclasses
+import logging
 from collections import OrderedDict
 
 import numpy as np
 
+from repro import obs
 from repro.core.schedule import RSCSchedule
 from repro.graphs.synthetic import GraphData
 from repro.models.gnn import MODELS
@@ -174,6 +176,9 @@ class PooledPlanner:
     def k_latest(self):
         return None
 
+    def publish(self, registry) -> None:
+        self.plan_pool.publish(registry)
+
     def state_dict(self):
         return self.plan_pool.state_dict()
 
@@ -270,6 +275,19 @@ def minibatch_engine(cfg: MinibatchConfig, graph: GraphData | None = None,
         raise ValueError(
             f"pool built with mean_agg={pool.mean_agg} but model "
             f"{cfg.model!r} needs mean_agg={module.uses_mean_agg()}")
+
+    # GraphSAINT λ/α correction status, logged ONCE at startup: whether
+    # the pool carries 1/λ_v loss weights (and α-normalized operands) is
+    # invisible later and silently biases sampled-pool training when off.
+    corrected = pool.subgraphs[0].loss_w is not None
+    logging.getLogger("repro.obs").info(
+        "GraphSAINT λ/α bias correction %s (pool method=%s, "
+        "saint_norm=%s)",
+        "ACTIVE" if corrected else "OFF",
+        cfg.method, getattr(cfg, "saint_norm", None))
+    obs.get_tracer().instant("saint_correction", active=corrected,
+                             method=cfg.method)
+    obs.get_registry().gauge("saint.correction_active", float(corrected))
 
     names = module.spmm_names(cfg.n_layers)
     dims = module.spmm_dims(cfg.n_layers, cfg.hidden, pool.num_classes)

@@ -22,6 +22,7 @@ import dataclasses
 
 import numpy as np
 
+from repro import obs
 from repro.core.cache import PlanCache
 from repro.core.plan import SamplePlan
 from repro.pipeline.partition import HostSubgraph, SubgraphPool
@@ -91,12 +92,15 @@ class PlanCachePool:
         """Plans for one RSC step on ``sub`` — building or refreshing first
         if this subgraph's clock says so."""
         sid = sub.sub_id
+        reg = obs.get_registry()
+        pool_label = self.label or "pool"
         cache = self.caches.get(sid)
         if cache is None:
             cache = self._build(sub)
             self.caches[sid] = cache
             self._visits_since_refresh[sid] = 0
             self.stats.cold += 1
+            reg.counter("plan_pool.cold", pool=pool_label)
         elif sid in self._last_norms and (
                 # Bootstrap: plans start exact (no gradient info at build),
                 # so run the allocator on the FIRST revisit — a subgraph only
@@ -105,12 +109,17 @@ class PlanCachePool:
                 # un-sampled. After that, the per-subgraph clock rules.
                 cache.stats.refreshes == 0
                 or self._visits_since_refresh[sid] >= self.refresh_every):
-            cache.refresh(self._last_norms[sid])
+            with reg.timer("plan_pool.refresh_ms", pool=pool_label):
+                cache.refresh(self._last_norms[sid])
             self._refresh_norms[sid] = self._last_norms[sid]
             self._visits_since_refresh[sid] = 0
             self.stats.refreshes += 1
+            reg.counter("plan_pool.refreshes", pool=pool_label)
+            obs.get_tracer().instant("plan_refresh", pool=pool_label,
+                                     sub=int(sid))
         else:
             self.stats.hits += 1
+            reg.counter("plan_pool.hits", pool=pool_label)
         self._visits_since_refresh[sid] += 1
         return cache.plans()
 
@@ -176,6 +185,19 @@ class PlanCachePool:
 
     def host_seconds(self) -> float:
         return sum(c.stats.host_seconds for c in self.caches.values())
+
+    def publish(self, registry) -> None:
+        """Epoch-end snapshot of this pool's clock stats → registry gauges
+        (labelled by pool, so sharded runs report per-shard)."""
+        pool_label = self.label or "pool"
+        registry.gauge("plan_pool.hit_rate", self.stats.hit_rate,
+                       pool=pool_label)
+        registry.gauge("plan_pool.subgraphs", len(self.caches),
+                       pool=pool_label)
+        registry.gauge("plan_pool.flops_fraction", self.flops_fraction(),
+                       pool=pool_label)
+        registry.gauge("plan_pool.host_seconds", self.host_seconds(),
+                       pool=pool_label)
 
     def summary(self) -> dict:
         """JSON-ready per-pool (per-shard) plan-cache statistics."""

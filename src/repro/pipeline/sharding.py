@@ -176,6 +176,17 @@ class ShardedPlanner:
     def k_latest(self):
         return None
 
+    def publish(self, registry) -> None:
+        """Per-shard plan-cache stats → registry (labelled shard0..N-1),
+        plus the pool-wide aggregates the result JSON reports."""
+        for p in self.pools:
+            p.publish(registry)
+        hr = self.hit_rate()
+        if hr is not None:
+            registry.gauge("plan_pool.hit_rate", hr, pool="all_shards")
+        registry.gauge("plan_pool.flops_fraction", self.flops_fraction(),
+                       pool="all_shards")
+
     def per_shard_summary(self) -> list[dict]:
         return [p.summary() for p in self.pools]
 

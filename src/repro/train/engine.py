@@ -33,8 +33,12 @@ import time
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core.cache import PlanCache
 from repro.core.schedule import RSCSchedule
+from repro.obs.sentinel import CompileSentinel, jit_compiles  # noqa: F401
+                                          # (jit_compiles re-exported: it
+                                          # lived here before repro.obs)
 from repro.graphs.synthetic import GraphData
 from repro.models.gnn import MODELS
 from repro.models.gnn.common import build_operands
@@ -82,14 +86,12 @@ class TrainConfig:
     # key), and falls back to a warm start otherwise.
     ckpt_dir: str | None = None
     ckpt_every: int = 0
-
-
-def jit_compiles(jitted) -> int | None:
-    """Number of tracings a jitted fn accumulated (None if unsupported)."""
-    try:
-        return int(jitted._cache_size())
-    except AttributeError:
-        return None
+    # Observability: the engine always records through the process-wide
+    # repro.obs bundle (no-op unless obs.configure() enabled it).
+    # ``strict_compiles`` arms the retrace sentinel to HARD-FAIL when a
+    # step function compiles more often than the one-compile-per-bucket
+    # invariant allows (tests/CI; production runs just get the counters).
+    strict_compiles: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -116,6 +118,9 @@ class NullPlanner:
 
     def k_latest(self):
         return None
+
+    def publish(self, registry) -> None:
+        pass
 
     def state_dict(self):
         return None
@@ -162,6 +167,18 @@ class FullGraphPlanner:
     def k_latest(self):
         kh = self.cache.stats.k_history
         return kh[-1] if kh else None
+
+    def publish(self, registry) -> None:
+        """Plan-cache clock stats → registry gauges (epoch-end dump)."""
+        s = self.cache.stats
+        registry.gauge("plan_cache.refreshes", s.refreshes)
+        registry.gauge("plan_cache.allocations", s.allocations)
+        registry.gauge("plan_cache.host_seconds", s.host_seconds)
+        registry.gauge("rsc.flops_fraction", self.flops_fraction())
+        k = self.k_latest()
+        if k is not None:
+            vals = list(k.values()) if isinstance(k, dict) else k
+            registry.gauge("rsc.k_latest", float(np.sum(vals)))
 
     def state_dict(self):
         """Everything a resumed run needs to rebuild the current plans:
@@ -412,6 +429,26 @@ class Engine:
                 self.module, self.opt, dims, names,
                 dropout=cfg.dropout, backend=cfg.backend)
 
+        # Retrace sentinel: the step functions must compile once per shape
+        # bucket (pooled plans share a fixed per-bucket plan_pad). The
+        # full-batch RSC step is exempt from a hard limit — its plan
+        # lengths re-bucket on the s_pad quantization grid, which is a
+        # bounded-but-unpredictable handful of recompiles by design.
+        self.obs = obs.get_obs()
+        nb = source.n_buckets
+        mult = 2 if (mesh is not None and compress_grads) else 1
+        rsc_limit = (None if isinstance(self.planner, FullGraphPlanner)
+                     else nb * mult)
+        self.sentinel = CompileSentinel(registry=self.obs.registry,
+                                        hard_fail=cfg.strict_compiles)
+        counts = self.runner.compile_counts
+        self.sentinel.watch("step.rsc", lambda: counts()["rsc"],
+                            limit=rsc_limit)
+        self.sentinel.watch("step.exact", lambda: counts()["exact"],
+                            limit=nb * mult)
+        self.sentinel.watch("step.eval", lambda: counts()["eval"],
+                            limit=nb)
+
         # Streaming full-graph evaluator (repro/infer): exact accuracy
         # even when the source's own evaluator only covers pooled nodes.
         self.stream_eval = None
@@ -429,6 +466,15 @@ class Engine:
                                       else cfg.stream_budget_mb),
                     backend=cfg.backend,
                     degree_sort=cfg.degree_sort))
+            # One compile per (layer, mode) — checked against the total
+            # once the lazily-built StreamingInference exists.
+            se = self.stream_eval
+            self.sentinel.watch(
+                "stream_eval.layers",
+                lambda: (None if se.si is None
+                         else max(se.si.compile_counts().values(),
+                                  default=0)),
+                limit=1)
 
         self.ckpt = None
         self._ckpt_base = 0   # step offset after restore(): saved step
@@ -512,29 +558,60 @@ class Engine:
             key = jax.numpy.asarray(r["key"])
             best_val, best_test = r["best"]
 
+        reg, tracer = self.obs.registry, self.obs.tracer
         for epoch in range(start_epoch, epochs):
             self._epoch_src_state = self.source.state_dict()
-            for bidx, (tag, ops) in enumerate(
-                    self.source.batches(epoch, skip=skip), start=skip):
+            batch_it = enumerate(self.source.batches(epoch, skip=skip),
+                                 start=skip)
+            while True:
+                # Sample/fetch time: blocking on the source iterator is the
+                # prefetcher-starved time (~0 when the upload thread keeps
+                # up, the whole upload latency when it does not).
+                t_fetch = time.perf_counter()
+                try:
+                    bidx, (tag, ops) = next(batch_it)
+                except StopIteration:
+                    break
+                reg.observe("engine.sample_ms",
+                            (time.perf_counter() - t_fetch) * 1e3)
                 key, sub = jax.random.split(key)
                 approx = self.schedule.use_rsc(gstep)
                 use_rsc = cfg.rsc and approx
                 compress = (self.compress_grads
                             and self.runner.supports_compression
                             and (approx if cfg.switching else True))
+                mode = "rsc" if use_rsc else "exact"
                 t0 = time.perf_counter()
-                if use_rsc:
-                    plans = self.planner.plans_for(tag, gstep, self.schedule)
-                    self.params, self.opt_state, lv, norms = \
-                        self.runner.rsc_step(self.params, self.opt_state,
-                                             ops, plans, sub, compress)
-                    self.planner.record(tag, norms)
-                else:
-                    self.params, self.opt_state, lv = \
-                        self.runner.exact_step(self.params, self.opt_state,
-                                               ops, sub, compress)
-                jax.block_until_ready(lv)
-                dt = time.perf_counter() - t0
+                with tracer.span("step", step=gstep, epoch=epoch,
+                                 mode=mode) as sp:
+                    if use_rsc:
+                        with tracer.span("plan"):
+                            plans = self.planner.plans_for(
+                                tag, gstep, self.schedule)
+                        with tracer.span("device_step", mode=mode):
+                            self.params, self.opt_state, lv, norms = \
+                                self.runner.rsc_step(
+                                    self.params, self.opt_state,
+                                    ops, plans, sub, compress)
+                            jax.block_until_ready(lv)
+                        self.planner.record(tag, norms)
+                        # Sampled every 16th step: the gauges are last-
+                        # write-wins anyway, and reading them forces a
+                        # device→host sync per op that would otherwise
+                        # tax EVERY step (~2-5% on small steps).
+                        if reg.enabled and gstep % 16 == 0:
+                            self._record_rsc_gauges(reg, plans, norms)
+                    else:
+                        with tracer.span("device_step", mode=mode):
+                            self.params, self.opt_state, lv = \
+                                self.runner.exact_step(
+                                    self.params, self.opt_state,
+                                    ops, sub, compress)
+                            jax.block_until_ready(lv)
+                    dt = time.perf_counter() - t0
+                    sp.set(dur_ms=round(dt * 1e3, 3))
+                reg.observe("engine.step_ms", dt * 1e3, mode=mode)
+                reg.counter("engine.steps", mode=mode)
 
                 self.history["loss"].append(float(lv))
                 self.history["step_time"].append(dt)
@@ -556,9 +633,19 @@ class Engine:
                         aux=self._capture_state(epoch, bidx + 1, gstep, key,
                                                 (best_val, best_test)))
             skip = 0
+            if self.obs.enabled:
+                # Fold the planner's plan-cache statistics into the
+                # registry each epoch (summary()/per-shard stats used to
+                # be write-only), and enforce/record compile counts.
+                self.planner.publish(reg)
+            self.sentinel.check(f"epoch {epoch}")
 
             if epoch % eval_every == 0 or epoch == epochs - 1:
-                val, test = self.evaluate(mfn)
+                with tracer.span("eval", epoch=epoch), \
+                        reg.timer("engine.eval_ms"):
+                    val, test = self.evaluate(mfn)
+                reg.gauge("engine.val_metric", val)
+                reg.gauge("engine.test_metric", test)
                 self.history["val"].append((epoch, val))
                 self.history["test"].append((epoch, test))
                 if val > best_val:
@@ -583,9 +670,11 @@ class Engine:
                     key, (best_val, best_test)))
             self.ckpt.wait()
 
+        compiles = self.sentinel.check("end of training")
         return {
             "best_val": best_val,
             "best_test": best_test,
+            "sentinel": compiles,
             "history": self.history,
             "cache_stats": self.planner.stats(),
             "plan_hit_rate": self.planner.hit_rate(),
@@ -596,6 +685,23 @@ class Engine:
         }
 
     # ------------------------------------------------------------------
+    @staticmethod
+    def _record_rsc_gauges(reg, plans, norms) -> None:
+        """Per-layer sampled fraction + gradient-row-norm gauges.
+
+        ``plans`` maps op name → SamplePlan (possibly device-stacked under
+        DP); ``norms`` maps op name → ∇H row norms the planner scores with
+        (the sampling residual signal). Means only — these are trend
+        gauges, not exact accounting.
+        """
+        for name, p in plans.items():
+            n_active = float(np.mean(np.asarray(p.n_active)))
+            reg.gauge("rsc.sampled_frac",
+                      n_active / max(int(p.s_pad), 1), op=name)
+        for name, v in norms.items():
+            reg.gauge("rsc.grad_row_norm",
+                      float(np.mean(np.asarray(v))), op=name)
+
     def evaluate(self, mfn=None) -> tuple[float, float]:
         mfn = mfn or metric_fn(self.cfg.metric)
         if self.stream_eval is not None:

@@ -1,0 +1,228 @@
+"""Unit tests for the telemetry substrate: registry histograms/quantiles,
+tracer span nesting + JSONL round-trip + Chrome export, guarded clock, and
+the compile/retrace sentinel."""
+import json
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs.clock import GuardedClock
+from repro.obs.registry import MetricsRegistry
+from repro.obs.sentinel import CompileSentinel, RetraceError
+from repro.obs.trace import Tracer
+
+
+@pytest.fixture(autouse=True)
+def _fresh_obs():
+    """Process-wide bundle must not leak between tests (default: off)."""
+    obs.reset()
+    yield
+    obs.reset()
+
+
+# ------------------------------- registry ---------------------------------
+
+def test_counter_and_gauge():
+    reg = MetricsRegistry(enabled=True)
+    reg.counter("c")
+    reg.counter("c", 2.5)
+    reg.gauge("g", 7.0)
+    reg.gauge("g", 9.0)          # last write wins
+    assert reg.get_counter("c") == pytest.approx(3.5)
+    assert reg.get_gauge("g") == pytest.approx(9.0)
+    assert reg.get_gauge("missing") is None
+    assert reg.get_counter("missing") == 0.0
+
+
+def test_labels_separate_instruments():
+    reg = MetricsRegistry(enabled=True)
+    reg.counter("steps", mode="rsc")
+    reg.counter("steps", mode="exact")
+    reg.counter("steps", mode="rsc")
+    assert reg.get_counter("steps", mode="rsc") == 2.0
+    assert reg.get_counter("steps", mode="exact") == 1.0
+    snap = reg.snapshot()
+    assert "steps{mode=rsc}" in snap["counters"]
+    # labels render sorted by key, independent of call order
+    reg.gauge("x", 1.0, b="2", a="1")
+    assert "x{a=1,b=2}" in reg.snapshot()["gauges"]
+
+
+def test_histogram_quantiles_match_numpy():
+    reg = MetricsRegistry(enabled=True)
+    rng = np.random.default_rng(0)
+    vals = rng.exponential(10.0, size=1000)
+    for v in vals:
+        reg.observe("lat", float(v))
+    h = reg.get_histogram("lat")
+    assert h["count"] == 1000
+    assert h["sum"] == pytest.approx(float(vals.sum()))
+    assert h["min"] == pytest.approx(float(vals.min()))
+    assert h["max"] == pytest.approx(float(vals.max()))
+    s = np.sort(vals)
+    for q, key in ((0.50, "p50"), (0.95, "p95"), (0.99, "p99")):
+        assert h[key] == pytest.approx(float(s[round(q * 999)]))
+
+
+def test_histogram_ring_buffer_keeps_newest():
+    reg = MetricsRegistry(enabled=True, max_samples=10)
+    for v in range(100):
+        reg.observe("h", float(v))
+    h = reg.get_histogram("h")
+    # exact aggregates over ALL observations ...
+    assert h["count"] == 100
+    assert h["min"] == 0.0 and h["max"] == 99.0
+    # ... but quantiles over the newest window only (90..99)
+    assert h["p50"] >= 90.0
+
+
+def test_timer_observes_milliseconds():
+    reg = MetricsRegistry(enabled=True)
+    with reg.timer("blk", phase="x"):
+        pass
+    h = reg.get_histogram("blk", phase="x")
+    assert h["count"] == 1
+    assert 0.0 <= h["sum"] < 1000.0   # ms, sane bound
+
+
+def test_disabled_registry_is_noop():
+    reg = MetricsRegistry(enabled=False)
+    reg.counter("c")
+    reg.gauge("g", 1.0)
+    reg.observe("h", 1.0)
+    with reg.timer("t"):
+        pass
+    snap = reg.snapshot()
+    assert snap == {"counters": {}, "gauges": {}, "histograms": {}}
+
+
+def test_registry_reset():
+    reg = MetricsRegistry(enabled=True)
+    reg.counter("c")
+    reg.reset()
+    assert reg.get_counter("c") == 0.0
+
+
+# -------------------------------- tracer ----------------------------------
+
+def test_span_nesting_depth_and_parent():
+    tr = Tracer(enabled=True)
+    with tr.span("outer", epoch=1):
+        with tr.span("inner") as sp:
+            sp.set(result=42)
+    evs = tr.snapshot()
+    by_name = {e["name"]: e for e in evs}
+    assert by_name["inner"]["depth"] == 1
+    assert by_name["inner"]["parent"] == "outer"
+    assert by_name["inner"]["args"] == {"result": 42}
+    assert by_name["outer"]["depth"] == 0
+    assert by_name["outer"]["parent"] is None
+    # inner closes first, so it appears first; outer's span covers it
+    assert evs[0]["name"] == "inner"
+    assert by_name["outer"]["dur_us"] >= by_name["inner"]["dur_us"]
+
+
+def test_jsonl_round_trip(tmp_path):
+    tr = Tracer(enabled=True)
+    with tr.span("a", k="v"):
+        tr.instant("mark", x=1)
+    p = tmp_path / "spans.jsonl"
+    tr.write_jsonl(p)
+    assert Tracer.read_jsonl(p) == tr.snapshot()
+
+
+def test_chrome_export_is_valid_trace(tmp_path):
+    tr = Tracer(enabled=True)
+    with tr.span("step", step=0):
+        tr.instant("refresh")
+    p = tmp_path / "trace.json"
+    tr.export_chrome(p)
+    doc = json.loads(p.read_text())
+    evs = doc["traceEvents"]
+    phs = {e["ph"] for e in evs}
+    assert {"M", "X", "i"} <= phs
+    x = next(e for e in evs if e["ph"] == "X")
+    assert x["name"] == "step" and x["dur"] >= 0 and "ts" in x
+    assert doc["otherData"]["dropped_events"] == 0
+
+
+def test_disabled_tracer_records_nothing():
+    tr = Tracer(enabled=False)
+    with tr.span("a") as sp:
+        sp.set(x=1)      # null span: no-op
+    tr.instant("b")
+    assert tr.snapshot() == []
+
+
+def test_event_cap_counts_dropped():
+    tr = Tracer(enabled=True, max_events=2)
+    for i in range(5):
+        tr.instant(f"e{i}")
+    assert len(tr.snapshot()) == 2
+    assert tr.dropped == 3
+
+
+# --------------------------------- clock ----------------------------------
+
+def test_guarded_clock_clamps_negative_deltas():
+    ticks = iter([10.0, 5.0, 5.0, 7.5])
+    clk = GuardedClock(now=lambda: next(ticks))
+    t0 = clk.now()
+    assert clk.elapsed(t0) == 0.0        # 5 - 10 < 0 → clamped
+    assert clk.anomalies == 1
+    t1 = clk.now()
+    assert clk.elapsed(t1) == pytest.approx(2.5)
+    assert clk.anomalies == 1
+
+
+# -------------------------------- sentinel --------------------------------
+
+def test_sentinel_publishes_and_enforces():
+    reg = MetricsRegistry(enabled=True)
+    n = {"v": 1}
+    s = CompileSentinel(registry=reg, hard_fail=True)
+    s.watch("site", lambda: n["v"], limit=2)
+    assert s.check("t0") == {"site": 1}
+    assert reg.get_gauge("jit.compiles", site="site") == 1
+    assert reg.get_counter("jit.retraces", site="site") == 1.0
+    n["v"] = 2
+    s.check("t1")                         # at the limit: fine
+    assert reg.get_counter("jit.retraces", site="site") == 2.0
+    n["v"] = 3
+    with pytest.raises(RetraceError, match="site: 3 compiles > limit 2"):
+        s.check("t2")
+
+
+def test_sentinel_soft_mode_and_none_counts():
+    s = CompileSentinel(hard_fail=False)
+    s.watch("a", lambda: 99, limit=1)
+    s.watch("b", lambda: None, limit=1)   # unobservable: never fails
+    assert s.check() == {"a": 99, "b": None}
+
+
+def test_sentinel_wraps_jitted_function():
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    f = jax.jit(lambda x: x + 1)
+    s = CompileSentinel(hard_fail=True)
+    s.watch("f", f, limit=1)
+    f(jnp.ones(3))
+    assert s.check()["f"] == 1
+    f(jnp.ones(3))                        # cache hit, no new trace
+    s.check()
+    f(jnp.ones(4))                        # new shape → second compile
+    with pytest.raises(RetraceError):
+        s.check()
+
+
+# ------------------------------ obs bundle --------------------------------
+
+def test_configure_flips_global_flags():
+    assert not obs.get_obs().enabled
+    obs.configure(metrics=True)
+    assert obs.get_registry().enabled and not obs.get_tracer().enabled
+    obs.configure(trace=True)
+    assert obs.get_obs().enabled
+    obs.configure(metrics=False, trace=False)
+    assert not obs.get_obs().enabled

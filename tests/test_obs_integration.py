@@ -1,0 +1,190 @@
+"""Telemetry wired through the real pipelines: compile-count invariants via
+the sentinel, prefetch/plan-pool metrics, streaming/serving histograms, and
+autotune provenance."""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.graphs.synthetic import sbm_graph
+from repro.infer import NodeServer, StreamConfig
+from repro.infer.stream import StreamingInference
+from repro.models.gnn import MODELS
+from repro.pipeline import MinibatchConfig, MinibatchTrainer
+
+
+@pytest.fixture(autouse=True)
+def _fresh_obs():
+    obs.reset()
+    yield
+    obs.reset()
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return sbm_graph(n_nodes=400, n_clusters=4, avg_degree=10, feat_dim=16,
+                     seed=0)
+
+
+def _params(graph, hidden=32, layers=2, seed=0):
+    return MODELS["gcn"].init(jax.random.PRNGKey(seed),
+                              graph.features.shape[1], hidden,
+                              graph.num_classes, layers, True)
+
+
+def _mb_cfg(**kw):
+    base = dict(model="gcn", n_layers=2, hidden=32, epochs=3, rsc=True,
+                budget=0.5, n_subgraphs=4, n_buckets=2, roots=40,
+                walk_length=3, autotune=False, strict_compiles=True)
+    base.update(kw)
+    return MinibatchConfig(**base)
+
+
+def test_fullbatch_rsc_metrics_publish(graph):
+    """Full-batch + metrics: the epoch-end planner publish must handle the
+    per-layer k array from the allocator (regression: float() on a length>1
+    ndarray crashed the run)."""
+    from repro.train.loop import GNNTrainer, TrainConfig
+
+    obs.configure(metrics=True)
+    cfg = TrainConfig(model="gcn", n_layers=2, hidden=32, dropout=0.0,
+                      epochs=15, rsc=True, budget=0.5, block=32)
+    GNNTrainer(cfg, graph).train(eval_every=5)
+    snap = obs.get_registry().snapshot()
+    assert snap["gauges"]["plan_cache.refreshes"] >= 1
+    assert snap["gauges"]["rsc.k_latest"] >= 0.0
+    assert snap["gauges"]["rsc.flops_fraction"] <= 1.0
+
+
+# --------------------------- compile invariants ---------------------------
+
+def test_minibatch_one_compile_per_bucket(graph):
+    """The tentpole invariant: under strict_compiles the run HARD-FAILS if
+    any jitted step site compiles more than once per shape bucket — and the
+    sentinel's final counts land in the result dict and the registry."""
+    obs.configure(metrics=True, trace=True)
+    tr = MinibatchTrainer(_mb_cfg(), graph)
+    res = tr.train(eval_every=2)       # RetraceError if invariant broken
+    nb = res["n_buckets"]
+    sent = res["sentinel"]
+    assert 1 <= sent["step.rsc"] <= nb
+    assert 1 <= sent["step.exact"] <= nb    # switch-back tail steps
+    assert 1 <= sent["step.eval"] <= nb
+    reg = obs.get_registry()
+    assert reg.get_gauge("jit.compiles", site="step.rsc") == sent["step.rsc"]
+
+
+def test_streaming_one_compile_per_layer(graph):
+    """Repeated forwards with FRESH params must reuse every compiled layer
+    function: exactly one compile per (layer, mode) key."""
+    si = StreamingInference(
+        graph, "gcn", _params(graph),
+        StreamConfig(block=32, n_partitions=3, memory_budget_mb=None))
+    si.forward()
+    si.forward(_params(graph, seed=1))
+    si.forward(_params(graph, seed=2))
+    counts = si.compile_counts()
+    assert len(counts) == si.n_layers
+    assert all(n == 1 for n in counts.values()), counts
+
+
+def test_engine_stream_eval_sentinel(graph):
+    """eval_mode='stream' arms a per-layer sentinel watch through the
+    engine; strict mode would raise if a layer fn ever recompiled."""
+    obs.configure(metrics=True)
+    tr = MinibatchTrainer(_mb_cfg(eval_mode="stream", n_buckets=1), graph)
+    res = tr.train(eval_every=2)
+    assert res["sentinel"]["stream_eval.layers"] == 1
+    assert obs.get_registry().get_histogram("stream.eval_ms")["count"] >= 1
+
+
+# ------------------------- pipeline metric wiring -------------------------
+
+def test_minibatch_metrics_and_trace(graph):
+    obs.configure(metrics=True, trace=True)
+    tr = MinibatchTrainer(_mb_cfg(n_buckets=1), graph)
+    tr.train(eval_every=2)
+    reg = obs.get_registry()
+    # prefetch: uploads counted and timed on the worker thread
+    assert reg.get_counter("prefetch.uploads") > 0
+    assert reg.get_histogram("prefetch.upload_ms")["count"] > 0
+    assert reg.get_histogram("prefetch.stall_ms")["count"] > 0
+    # plan pool: epoch-end publish of the (previously dead) summary stats
+    assert reg.get_gauge("plan_pool.hit_rate", pool="pool") is not None
+    assert reg.get_gauge("plan_pool.flops_fraction", pool="pool") is not None
+    # GraphSAINT λ/α correction status recorded once at startup
+    assert reg.get_gauge("saint.correction_active") == 1.0
+    # per-layer RSC gauges from the step loop
+    assert reg.get_gauge("rsc.sampled_frac", op="gcn/spmm0") is not None
+    # step/eval latency histograms
+    assert reg.get_histogram("engine.step_ms", mode="rsc")["count"] > 0
+    assert reg.get_histogram("engine.eval_ms")["count"] > 0
+    # the trace carries the expected span structure
+    names = obs.get_tracer().span_names()
+    assert {"step", "plan", "device_step", "eval", "upload"} <= names
+
+
+def test_disabled_obs_records_nothing(graph):
+    tr = MinibatchTrainer(_mb_cfg(n_buckets=1, epochs=2), graph)
+    res = tr.train(eval_every=2)
+    assert res["sentinel"]["step.rsc"] >= 1   # sentinel works regardless
+    snap = obs.get_registry().snapshot()
+    assert snap == {"counters": {}, "gauges": {}, "histograms": {}}
+    assert obs.get_tracer().snapshot() == []
+
+
+# ------------------------------- serving ----------------------------------
+
+def test_serve_histograms_and_guarded_clock(graph):
+    obs.configure(metrics=True)
+    srv = NodeServer(graph, "gcn", _params(graph),
+                     StreamConfig(block=32, n_partitions=2,
+                                  memory_budget_mb=None))
+    srv.query([0, 1, 2])
+    srv.query(np.arange(10))
+    st = srv.update_edges(add=[(0, 5)])
+    reg = obs.get_registry()
+    assert reg.get_histogram("serve.query_ms")["count"] == 2
+    assert reg.get_counter("serve.queries") == 13.0
+    assert reg.get_counter("serve.updates") == 1.0
+    assert reg.get_counter("serve.dirty_nodes") == st["dirty_nodes"]
+    assert reg.get_histogram("serve.update_ms")["count"] == 1
+    assert reg.get_gauge("serve.build_seconds") >= 0.0
+    assert srv.stats()["clock_anomalies"] == 0
+
+
+# ------------------------------- autotune ---------------------------------
+
+def test_autotune_provenance_and_interpret_warning(graph, tmp_path):
+    from repro.kernels import autotune
+    obs.configure(metrics=True)
+    cache = autotune.reset(tmp_path / "tune.json")
+    try:
+        kw = dict(bm=32, bk=32, d=32, s_pad=64, n_row_blocks=4,
+                  n_col_blocks=4)
+        autotune.get_or_tune("jnp", persist=False, **kw)
+        e = cache.entries[autotune.signature("jnp", **kw)]
+        assert e["backend"] == "jnp"
+        assert e["interpret"] is False
+        assert e["platform"] in ("cpu", "gpu", "tpu")
+        assert obs.get_registry().get_counter(
+            "autotune.sweeps", backend="jnp") == 1.0
+
+        # an interpret-swept entry served to a REAL pallas dispatch warns
+        # once per signature and counts every serve
+        psig = "pallas|bm32|bk32|d32|s64|rb4|dens1"
+        cache.entries[psig] = {"bd": 256, "chunk": 32, "us": 1.0,
+                               "interpret": True, "platform": "cpu"}
+        with pytest.warns(RuntimeWarning, match="interpret mode"):
+            got = cache.get(psig)
+        assert got.bd == 256 and got.source == "cache"
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")   # second serve: no re-warn
+            cache.get(psig)
+        assert cache.stats.interpret_served == 2
+        assert obs.get_registry().get_counter(
+            "autotune.interpret_served") == 2.0
+    finally:
+        autotune.reset()
