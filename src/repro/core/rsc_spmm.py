@@ -121,7 +121,28 @@ def spmm_apply(
     ``out = max(acc + bias + residual, 0) if relu else acc + bias + residual``.
     Tuning knobs (Pallas ``bd``, streaming ``chunk``) resolve through
     :mod:`repro.kernels.autotune` when not given explicitly.
+
+    Backends: ``"stream"`` (alias ``"jnp"``, the chunked-scan fallback),
+    ``"pallas"`` / ``"pallas_interpret"`` (row-segmented kernel),
+    ``"dense"`` (scatter-into-dense + one matmul,
+    :mod:`repro.kernels.dense_spmm`), and ``"auto"`` — a trace-time read of
+    the per-signature backend decision cached by
+    :func:`repro.kernels.autotune.get_or_tune_auto` (never sweeps; the
+    heuristic default is the streaming path).
     """
+    if backend == "auto":
+        from repro.kernels import autotune
+        cfg = autotune.lookup(autotune.signature(
+            "auto", bm=bm, bk=bk, d=h.shape[-1], s_pad=plan.s_pad,
+            n_row_blocks=n_row_blocks,
+            n_col_blocks=h.shape[0] // bk), d=h.shape[-1])
+        backend = cfg.backend
+        if backend == "pallas":
+            from repro.kernels import ops as kops
+            if not kops.on_tpu():
+                backend = "pallas_interpret"
+        if chunk is None:
+            chunk = cfg.chunk
     if backend == "pallas" or backend == "pallas_interpret":
         from repro.kernels import ops as kops
         return kops.bcoo_spmm(
@@ -130,6 +151,14 @@ def spmm_apply(
             row_ptr=plan.row_ptr, bias=bias, residual=residual, relu=relu,
             interpret=(backend == "pallas_interpret"),
         )
+    if backend == "dense":
+        from repro.kernels.dense_spmm import dense_spmm
+        return dense_spmm(
+            blocks, plan.sel, plan.row_ids, plan.col_ids, h,
+            n_row_blocks=n_row_blocks, bm=bm, bk=bk,
+            bias=bias, residual=residual, relu=relu)
+    if backend not in ("jnp", "stream"):
+        raise ValueError(f"unknown SpMM backend {backend!r}")
     if chunk is None:
         from repro.kernels import autotune
         chunk = autotune.lookup(autotune.signature(

@@ -33,7 +33,9 @@ paper's accuracy/latency trade-off extended to inference.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
+from collections import OrderedDict
 
 import jax
 import jax.numpy as jnp
@@ -65,6 +67,15 @@ class StreamConfig:
     switches to RSC-sampled column gathers. ``store_layers`` keeps every
     layer's activations (and frozen batchnorm statistics) on host — the
     serving frontend needs them for incremental recompute.
+
+    ``resident_mb`` enables the device-resident partition LRU: a
+    partition's STATIC operands (tiles + id lists + row_ptr — everything
+    the layer loop would otherwise re-upload every layer of every
+    forward) stay on device up to that byte budget, evicted
+    least-recently-used. ``overlap`` double-buffers the per-partition
+    upload (activation gather + ``device_put``) against the previous
+    partition's device SpMM, reusing the ``pipeline.prefetch`` pattern.
+    Both default off — the exact PR-4 execution path.
     """
 
     block: int = 64                    # bm == bk of the tiled operand
@@ -76,6 +87,82 @@ class StreamConfig:
     degree_sort: bool = True
     autotune: bool = False                 # sweep SpMM tiles up front
     store_layers: bool = False
+    resident_mb: float | None = None       # device partition LRU budget
+    overlap: bool = False                  # double-buffer uploads
+
+
+class _DeviceLRU:
+    """Budget-aware LRU of device-resident partition operands.
+
+    Values are the ``device_put`` STATIC operand tuples of one partition
+    (tiles, sel, row_ids, col_ids, row_ptr) keyed by ``(mode, part)``; the
+    activation slab is never cached (it changes every layer). Hot
+    partitions therefore stop paying the tile re-upload on every layer of
+    every forward — the dominant host→device traffic of streaming
+    inference when the graph fits. Eviction keeps ``resident_bytes``
+    under ``budget_bytes`` (the newest entry always survives, even
+    oversized: evicting it would just re-upload next layer). Counters and
+    gauges (``stream.lru_*``) publish through ``repro.obs``; plain-int
+    stats stay readable on the object when obs is disabled. Thread-safe:
+    the overlap prefetch thread and the main loop share it (uploads run
+    outside the lock; a racing duplicate upload is harmless — last insert
+    wins).
+    """
+
+    def __init__(self, budget_bytes: int):
+        self.budget_bytes = int(budget_bytes)
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.resident_bytes = 0
+        self._entries: OrderedDict[tuple, tuple] = OrderedDict()
+        self._bytes: dict[tuple, int] = {}
+        self._lock = threading.Lock()
+
+    def get(self, key: tuple, build):
+        with self._lock:
+            ent = self._entries.get(key)
+            if ent is not None:
+                self._entries.move_to_end(key)
+                self.hits += 1
+                obs.get_registry().counter("stream.lru_hits")
+                self._publish()
+                return ent
+        val = build()   # slow upload outside the lock
+        nbytes = int(sum(x.nbytes for x in val))
+        reg = obs.get_registry()
+        with self._lock:
+            self.misses += 1
+            reg.counter("stream.lru_misses")
+            if key not in self._entries:
+                self._entries[key] = val
+                self._bytes[key] = nbytes
+                self.resident_bytes += nbytes
+            self._entries.move_to_end(key)
+            while (self.resident_bytes > self.budget_bytes
+                   and len(self._entries) > 1):
+                old, _ = self._entries.popitem(last=False)
+                self.resident_bytes -= self._bytes.pop(old)
+                self.evictions += 1
+                reg.counter("stream.lru_evictions")
+            self._publish()
+        return val
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self._bytes.clear()
+            self.resident_bytes = 0
+            self._publish()
+
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def _publish(self) -> None:
+        reg = obs.get_registry()
+        reg.gauge("stream.lru_resident_bytes", self.resident_bytes)
+        reg.gauge("stream.lru_hit_rate", self.hit_rate())
 
 
 @dataclasses.dataclass
@@ -124,6 +211,8 @@ class StreamingInference:
         self.num_classes = graph.num_classes
         self.multilabel = graph.multilabel
         self._mean_agg = self.module.uses_mean_agg()
+        self.lru = (_DeviceLRU(int(cfg.resident_mb * 2 ** 20))
+                    if cfg.resident_mb else None)
 
         self._set_operand(adj)
         n_pad = self.host.n_rows
@@ -163,6 +252,8 @@ class StreamingInference:
         long as the padded shapes do."""
         old_pads = dict(self._pads)
         self._set_operand(adj)
+        if self.lru is not None:
+            self.lru.clear()   # cached tiles belong to the old operand
         self._build_partitions()
         for mode, pads in self._pads.items():
             if old_pads.get(mode) != pads:
@@ -352,45 +443,95 @@ class StreamingInference:
         return {f"layer{l}/{mode}": (jit_compiles(fn) or 0)
                 for (l, mode), fn in self._layer_fns.items()}
 
+    def _statics(self, mode: str, i: int | None, p: _Partition):
+        """The partition's static device operands, through the resident
+        LRU when enabled. Ad-hoc partitions (``recompute_rows`` chunks,
+        ``i is None``) never enter the cache — their operands are
+        one-shot."""
+        def build():
+            return jax.block_until_ready(jax.device_put(
+                (p.blocks, p.sel, p.row_ids, p.col_ids, p.row_ptr)))
+        if self.lru is not None and i is not None:
+            return self.lru.get((mode, i), build)
+        return build()
+
     def _spmm_layer(self, l: int, h: np.ndarray, pre, mode: str,
                     parts: list[_Partition] | None = None,
                     d_out: int | None = None) -> np.ndarray:
         """SpMM(operand, pre(h)) for all rows covered by ``parts``."""
-        parts = parts if parts is not None else self._parts[mode]
+        adhoc = parts is not None
+        parts = parts if adhoc else self._parts[mode]
         fn = self._layer_fn(l, mode, pre)
         bundle = obs.get_obs()
+        pre_params = pre[1] if pre is not None else {}
         out = None
-        for i, p in enumerate(parts):
-            if bundle.enabled:
-                res = self._timed_partition(bundle, fn, l, mode, i, p, h, pre)
-            else:
-                slab = np.ascontiguousarray(h[p.gather_rows])
-                res = fn(p.blocks, p.sel, p.row_ids, p.col_ids, p.row_ptr,
-                         jnp.asarray(p.n_active, jnp.int32), slab,
-                         pre[1] if pre is not None else {})
+
+        if self.cfg.overlap and not adhoc:
+            iterator = self._overlapped(fn, l, mode, parts, h, pre_params)
+        else:
+            def _serial():
+                for i, p in enumerate(parts):
+                    key_i = None if adhoc else i
+                    if bundle.enabled or self.lru is not None:
+                        yield p, self._timed_partition(
+                            bundle, fn, l, mode, i, p, h, pre_params, key_i)
+                    else:
+                        slab = np.ascontiguousarray(h[p.gather_rows])
+                        yield p, fn(p.blocks, p.sel, p.row_ids, p.col_ids,
+                                    p.row_ptr,
+                                    jnp.asarray(p.n_active, jnp.int32),
+                                    slab, pre_params)
+            iterator = _serial()
+        for p, res in iterator:
             res = np.asarray(res)
             if out is None:
                 out = np.zeros((self.host.n_rows, res.shape[1]), np.float32)
             out[p.out_rows] = res[: p.n_rows]
         return out
 
+    def _overlapped(self, fn, l: int, mode: str, parts, h: np.ndarray,
+                    pre_params):
+        """Double-buffered partition loop: a prefetch thread gathers the
+        activation slab and ``device_put``s partition i+1's operands
+        (statics through the LRU when enabled) while the main thread runs
+        partition i's SpMM — the ``pipeline.prefetch`` pattern pointed at
+        inference partitions instead of pool subgraphs."""
+        from repro.pipeline.prefetch import Prefetcher
+
+        def fetch(i):
+            p = parts[i]
+            statics = self._statics(mode, i, p)
+            slab = jax.device_put(np.ascontiguousarray(h[p.gather_rows]))
+            return statics + (jax.block_until_ready(slab),)
+
+        pf = Prefetcher(None, range(len(parts)), fetch=fetch, enabled=True)
+        tracer = obs.get_tracer()
+        for i, ups in pf:
+            p = parts[i]
+            with tracer.span("stream_partition", layer=l, mode=mode,
+                             part=i):
+                res = fn(*ups[:5], jnp.asarray(p.n_active, jnp.int32),
+                         ups[5], pre_params)
+            yield p, res
+
     def _timed_partition(self, bundle, fn, l: int, mode: str, i: int,
-                         p: _Partition, h: np.ndarray, pre):
+                         p: _Partition, h: np.ndarray, pre_params,
+                         key_i: int | None = None):
         """Instrumented partition step: splits host gather + host→device
         upload from device compute (explicit ``device_put`` + blocking —
         the un-instrumented path lets jit overlap them, so this split only
-        runs when observability is on)."""
+        runs when observability or the resident LRU is on; with the LRU,
+        the 'upload' phase is a cache read on hot partitions)."""
         reg, tracer = bundle.registry, bundle.tracer
         with tracer.span("stream_partition", layer=l, mode=mode, part=i):
             t0 = time.perf_counter()
             slab = np.ascontiguousarray(h[p.gather_rows])
-            blocks_d, slab_d = jax.block_until_ready(
-                jax.device_put((p.blocks, slab)))
+            statics = self._statics(mode, key_i, p)
+            slab_d = jax.block_until_ready(jax.device_put(slab))
             t1 = time.perf_counter()
             res = jax.block_until_ready(
-                fn(blocks_d, p.sel, p.row_ids, p.col_ids, p.row_ptr,
-                   jnp.asarray(p.n_active, jnp.int32), slab_d,
-                   pre[1] if pre is not None else {}))
+                fn(*statics, jnp.asarray(p.n_active, jnp.int32), slab_d,
+                   pre_params))
             t2 = time.perf_counter()
         reg.observe("stream.upload_ms", (t1 - t0) * 1e3,
                     layer=str(l), mode=mode)

@@ -14,32 +14,46 @@ module owns that decision:
   of the bucket's representative shape — ``chunk`` (tiles per scan step of
   the streaming jnp fallback) and ``bd`` (dense column tile of the
   row-segmented Pallas kernel) — and caches the winner;
+* :func:`get_or_tune_auto` goes one level up: it sweeps the SAME
+  representative shape across **lowerings** (``stream`` chunked scan,
+  ``dense`` scatter-into-dense matmul, ``pallas`` row-segmented kernel on
+  real TPU) and records the winning *backend* in the cache alongside its
+  tile knobs — the format/knob choice is input-dependent (Qiu et al.),
+  and "Fast Training of Sparse GNNs on Dense Hardware" shows the dense
+  lowering flips the winner at moderate densities, so the decision is
+  per density-band signature, never global;
 * :func:`lookup` is the zero-cost trace-time read consulted by
   ``kernels.ops`` / ``core.rsc_spmm`` at dispatch: cached winner if the
   signature was ever tuned (this process or a previous one, via the JSON
   file), heuristic default otherwise. ``lookup`` NEVER sweeps, so cold
-  dispatch never stalls a jit trace.
+  dispatch never stalls a jit trace — but a miss is no longer silent:
+  it bumps the ``autotune.miss{sig}`` counter and logs once per
+  signature, so cold-cache dispatch is visible in the metrics snapshot.
 
 Cache file format (``RSC_AUTOTUNE_CACHE`` env var, default
 ``~/.cache/repro-rsc/spmm_autotune.json``)::
 
     {"version": 1,
      "entries": {"<signature>": {"bd": 512, "chunk": 16, "us": 1234.5,
-                                 "backend": "pallas_interpret",
+                                 "backend": "dense",
                                  "platform": "cpu", "device": "...",
-                                 "interpret": true}}}
+                                 "interpret": false}}}
 
 ``us`` records the winning candidate's measured microseconds per call and
 ``backend``/``platform``/``device``/``interpret`` where that timing came
-from — interpret-mode sweeps are provenance, not signal, and dispatch
-WARNS (and counts, via ``repro.obs``) when it serves an interpret-timed
-winner to a real hardware backend. Unknown keys are preserved on rewrite;
-writes are atomic (tmp file + rename).
+from; for ``auto|...`` signatures ``backend`` is additionally the
+DISPATCH DECISION (``stream`` | ``dense`` | ``pallas``) that
+``core.rsc_spmm.spmm_apply(backend="auto")`` serves per signature.
+Interpret-mode sweeps are provenance, not signal, and dispatch WARNS (and
+counts, via ``repro.obs``) when it serves an interpret-timed winner to a
+real hardware backend. Unknown keys are preserved on rewrite; writes are
+atomic (tmp file + rename).
 """
 from __future__ import annotations
 
 import dataclasses
 import json
+import logging
 import os
 import time
 import uuid
@@ -49,6 +63,8 @@ from pathlib import Path
 import numpy as np
 
 from repro import obs
+
+logger = logging.getLogger(__name__)
 
 CHUNK_CANDIDATES = (8, 16, 32, 64, 128)
 BD_CANDIDATES = (128, 256, 512)
@@ -64,11 +80,24 @@ SWEEP_MAX_BLOCKS = 64
 SWEEP_MAX_D = 512
 
 
+AUTO_BACKENDS_CPU = ("stream", "dense")
+
+
+def canonical_backend(name: str) -> str:
+    """Canonical backend names are ``stream`` | ``pallas`` | ``dense``.
+
+    ``jnp`` is the legacy alias of the streaming scan;
+    ``pallas_interpret`` is the interpret-mode flavor of ``pallas``.
+    """
+    return {"jnp": "stream", "pallas_interpret": "pallas"}.get(name, name)
+
+
 @dataclasses.dataclass(frozen=True)
 class SpmmConfig:
     bd: int       # dense column tile of the Pallas kernel
     chunk: int    # tiles per scan step of the streaming jnp fallback
     source: str = "default"   # "default" | "swept" | "cache"
+    backend: str = "stream"   # chosen lowering: stream | pallas | dense
 
 
 @dataclasses.dataclass
@@ -127,6 +156,7 @@ class AutotuneCache:
         self.stats = TuneStats()
         self._loaded = False
         self._warned: set[str] = set()   # interpret-served warn-once keys
+        self._missed: set[str] = set()   # lookup-miss log-once keys
 
     def _load(self) -> None:
         if self._loaded:
@@ -209,9 +239,13 @@ class AutotuneCache:
                     "timing is not hardware signal — re-sweep on this "
                     "backend (delete the entry or point RSC_AUTOTUNE_CACHE "
                     "at a fresh file)", RuntimeWarning, stacklevel=3)
+        backend = canonical_backend(
+            str(e.get("backend") or sig.split("|", 1)[0]))
+        if backend == "auto":   # pre-backend entry under an auto signature
+            backend = "stream"
         return SpmmConfig(bd=int(e.get("bd", DEFAULT_BD)),
                           chunk=int(e.get("chunk", DEFAULT_CHUNK)),
-                          source="cache")
+                          source="cache", backend=backend)
 
     def put(self, sig: str, cfg: SpmmConfig, us: float,
             persist: bool = True,
@@ -250,7 +284,11 @@ def default_config(d: int) -> SpmmConfig:
 def lookup(sig: str, d: int | None = None) -> SpmmConfig:
     """Trace-time config read: cached winner or heuristic default.
 
-    Never sweeps — jit traces must not stall on a timing run.
+    Never sweeps — jit traces must not stall on a timing run. A miss is
+    still answered instantly (heuristic default) but is no longer
+    invisible: it bumps ``autotune.miss{sig}`` and logs once per
+    signature, so a cold cache shows up in the metrics snapshot rather
+    than only in mysteriously-slow steps.
     """
     _cache.stats.lookups += 1
     cfg = _cache.get(sig)
@@ -258,6 +296,13 @@ def lookup(sig: str, d: int | None = None) -> SpmmConfig:
         _cache.stats.hits += 1
         return cfg
     _cache.stats.defaults += 1
+    obs.get_registry().counter("autotune.miss", sig=sig)
+    if sig not in _cache._missed:
+        _cache._missed.add(sig)
+        logger.info(
+            "autotune cache miss for signature %s — dispatching the "
+            "heuristic default (run get_or_tune/get_or_tune_auto or point "
+            "RSC_AUTOTUNE_CACHE at a warmed cache to remove this)", sig)
     return default_config(d if d is not None else DEFAULT_BD)
 
 
@@ -299,6 +344,57 @@ def get_or_tune(backend: str, *, bm: int, bk: int, d: int, s_pad: int,
     return cfg
 
 
+def auto_backends() -> tuple[str, ...]:
+    """Lowering candidates for the cross-backend sweep on this host.
+
+    ``pallas`` joins only on real TPU: interpret-mode timings are pure
+    emulation overhead and would poison the ranking (they are provenance,
+    never signal — see the interpret-served warning in :meth:`get`).
+    """
+    from repro.kernels import ops as kops
+    if kops.on_tpu():
+        return AUTO_BACKENDS_CPU + ("pallas",)
+    return AUTO_BACKENDS_CPU
+
+
+def get_or_tune_auto(*, bm: int, bk: int, d: int, s_pad: int,
+                     n_row_blocks: int, n_col_blocks: int,
+                     persist: bool = True,
+                     backends: tuple[str, ...] | None = None) -> SpmmConfig:
+    """Cross-backend winner for this signature, sweeping once on a miss.
+
+    Sweeps every candidate lowering (:func:`auto_backends` unless
+    ``backends`` overrides) at the bucket's representative shape, caches
+    the fastest as an ``auto|...`` entry whose ``backend`` field is the
+    dispatch decision ``core.rsc_spmm.spmm_apply(backend="auto")`` serves.
+    Per-backend signatures tuned by :func:`get_or_tune` are untouched —
+    the two namespaces coexist in one cache file.
+    """
+    sig = signature("auto", bm=bm, bk=bk, d=d, s_pad=s_pad,
+                    n_row_blocks=n_row_blocks, n_col_blocks=n_col_blocks)
+    cfg = _cache.get(sig)
+    if cfg is not None:
+        _cache.stats.hits += 1
+        return cfg
+    reg = obs.get_registry()
+    best: tuple[float, SpmmConfig, dict] | None = None
+    for backend in (backends if backends is not None else auto_backends()):
+        cand, us, prov = _sweep(backend, bm=bm, bk=bk, d=d, s_pad=s_pad,
+                                n_row_blocks=n_row_blocks,
+                                n_col_blocks=n_col_blocks)
+        _cache.stats.sweeps += 1
+        reg.counter("autotune.sweeps", backend=backend)
+        reg.observe("autotune.sweep_us", us, backend=backend)
+        if best is None or us < best[0]:
+            best = (us, cand, prov)
+    us, cfg, prov = best
+    _cache.put(sig, cfg, us, persist=persist,
+               provenance={**prov, "backend": cfg.backend})
+    obs.get_tracer().instant("autotune_auto", sig=sig, us=round(us, 1),
+                             backend=cfg.backend)
+    return cfg
+
+
 def _sweep(backend: str, *, bm: int, bk: int, d: int, s_pad: int,
            n_row_blocks: int, n_col_blocks: int,
            ) -> tuple[SpmmConfig, float, dict]:
@@ -327,7 +423,7 @@ def _sweep(backend: str, *, bm: int, bk: int, d: int, s_pad: int,
 
     best: tuple[float, SpmmConfig] | None = None
     interpret = False
-    if backend == "jnp":
+    if backend in ("jnp", "stream"):
         import functools
 
         import jax
@@ -340,9 +436,23 @@ def _sweep(backend: str, *, bm: int, bk: int, d: int, s_pad: int,
             fn = lambda f=jitted: f(blocks, sel, rows, cols, h)  # noqa: E731
             us = _bench(fn) * 1e6
             cfg = SpmmConfig(bd=default_config(d).bd, chunk=chunk,
-                             source="swept")
+                             source="swept", backend="stream")
             if best is None or us < best[0]:
                 best = (us, cfg)
+    elif backend == "dense":
+        import functools
+
+        import jax
+
+        from repro.kernels.dense_spmm import dense_spmm
+        # No tunable knob: the lowering is one scatter + one matmul. It is
+        # still timed so get_or_tune_auto can rank it against the others.
+        jitted = jax.jit(functools.partial(
+            dense_spmm, n_row_blocks=rb_rep, bm=bm, bk=bk))
+        fn = lambda: jitted(blocks, sel, rows, cols, h)  # noqa: E731
+        us = _bench(fn) * 1e6
+        best = (us, SpmmConfig(bd=default_config(d).bd, chunk=DEFAULT_CHUNK,
+                               source="swept", backend="dense"))
     else:
         from repro.kernels import ops as kops
         from repro.sparse.bcoo import host_row_ptr
@@ -355,9 +465,12 @@ def _sweep(backend: str, *, bm: int, bk: int, d: int, s_pad: int,
                 blocks, sel, rows, cols, h, n_row_blocks=rb_rep,
                 bm=bm, bk=bk, bd=b, row_ptr=rptr, interpret=interpret)
             us = _bench(fn, iters=1 if interpret else 3) * 1e6
-            cfg = SpmmConfig(bd=bd, chunk=DEFAULT_CHUNK, source="swept")
+            cfg = SpmmConfig(bd=bd, chunk=DEFAULT_CHUNK, source="swept",
+                             backend="pallas")
             if best is None or us < best[0]:
                 best = (us, cfg)
+    # raw requested name ("jnp", "pallas_interpret", ...): provenance says
+    # what was timed; get() canonicalizes when serving the dispatch choice
     prov = {"backend": backend,
             "platform": _current_platform(),
             "device": _current_device_kind(),

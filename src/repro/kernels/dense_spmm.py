@@ -1,0 +1,102 @@
+"""Dense-lowering SpMM backend: tile segments cast as one MXU matmul.
+
+"Fast Training of Sparse Graph Neural Networks on Dense Hardware" observes
+that on matmul-unit hardware a sparse operand of moderate density is often
+FASTER as a plain dense matmul than through any gather-based sparse
+schedule: the gathers, sorts and scatter-adds of the sparse paths cost more
+than the redundant multiply-by-zero FLOPs they avoid. This module is that
+lowering for the block-COO engine:
+
+* :func:`dense_lowering` scatter-adds each row block's tile segment into
+  that row block's dense strip of the full ``(n_rb·bm, n_cb·bk)`` operand
+  (every column block represented; untouched positions stay zero), and
+* :func:`dense_spmm` runs ``operand @ h`` as one ``jnp.dot`` with the same
+  fused ``bias`` / ``residual`` / ``relu`` epilogue contract as the
+  row-segmented Pallas kernel and the streaming jnp fallback.
+
+The id-list convention is shared with ``core.rsc_spmm.spmm_stream``:
+sentinel entries point ``sel`` at the trailing all-zero tile (adds
+nothing), and out-of-range ``row_ids`` (the ``n_row_blocks`` padding
+convention) are dropped by the scatter. Duplicate ``(row, col)`` tiles
+accumulate, matching ``segment_sum`` semantics, so any valid
+:class:`~repro.core.plan.SamplePlan` lowers exactly.
+
+The custom-VJP contract comes for free: ``core.rsc_spmm`` differentiates
+*around* ``spmm_apply`` (exact forward, sampled backward, epilogue grads
+from the fused output), so selecting ``backend="dense"`` there reuses the
+existing VJPs unchanged — only the inner apply is swapped.
+
+Cost model (why the autotuner decides per signature): the dense lowering
+does ``2·n_rb·n_cb·bm·bk·d`` FLOPs regardless of how many tiles are
+active, plus an ``O(s_pad·bm·bk)`` scatter; the sparse paths do
+``2·s_pad·bm·bk·d``. Below some density band the wasted FLOPs dominate,
+above it the matmul's hardware efficiency wins — the crossover is
+input-dependent (measured per density band in ``BENCH_spmm.json``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_lowering(
+    blocks: jax.Array,    # (S+1, bm, bk) tiles incl. trailing zero sentinel
+    sel: jax.Array,       # (s_pad,) int32
+    row_ids: jax.Array,   # (s_pad,) int32
+    col_ids: jax.Array,   # (s_pad,) int32
+    *,
+    n_row_blocks: int,
+    n_col_blocks: int,
+    bm: int,
+    bk: int,
+) -> jax.Array:
+    """Materialize the plan's tiles as the dense operand matrix.
+
+    Each tile lands in its row block's dense strip at the column block's
+    offset; the strip view ``(n_rb, bm, n_cb·bk)`` is what the matmul
+    consumes. Scatter-ADD (not set) so duplicated ids accumulate like the
+    segment-sum oracle; ``mode="drop"`` discards padding rows at
+    ``row_ids == n_row_blocks``.
+    """
+    tiles = blocks[sel].astype(jnp.float32)          # (s_pad, bm, bk)
+    dense = jnp.zeros((n_row_blocks, n_col_blocks, bm, bk), jnp.float32)
+    dense = dense.at[row_ids, col_ids].add(tiles, mode="drop")
+    # (n_rb, n_cb, bm, bk) -> (n_rb·bm, n_cb·bk) row-major dense matrix
+    return dense.transpose(0, 2, 1, 3).reshape(
+        n_row_blocks * bm, n_col_blocks * bk)
+
+
+def dense_spmm(
+    blocks: jax.Array,
+    sel: jax.Array,
+    row_ids: jax.Array,
+    col_ids: jax.Array,
+    h: jax.Array,          # (n_cols, d)
+    *,
+    n_row_blocks: int,
+    bm: int,
+    bk: int,
+    bias: jax.Array | None = None,
+    residual: jax.Array | None = None,
+    relu: bool = False,
+) -> jax.Array:
+    """``epilogue(dense_lowering(plan) @ h)`` — one matmul, fused epilogue.
+
+    Epilogue contract (identical on every backend):
+    ``out = max(acc + bias + residual, 0) if relu else acc + bias +
+    residual``.
+    """
+    n_cols = h.shape[0]
+    assert n_cols % bk == 0, (n_cols, bk)
+    a = dense_lowering(blocks, sel, row_ids, col_ids,
+                       n_row_blocks=n_row_blocks, n_col_blocks=n_cols // bk,
+                       bm=bm, bk=bk)
+    out = jnp.dot(a, h.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    if residual is not None:
+        out = out + residual.astype(jnp.float32)
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out.astype(h.dtype)

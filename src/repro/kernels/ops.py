@@ -10,11 +10,16 @@ column tile (or a heuristic default if the signature was never swept).
 """
 from __future__ import annotations
 
+import logging
 import math
 
 import jax
 
+from repro import obs
 from repro.kernels import autotune
+
+logger = logging.getLogger(__name__)
+_bd_fallback_logged: set[tuple[int, int]] = set()
 from repro.kernels.bcoo_spmm import bcoo_spmm as _bcoo_spmm_pallas
 from repro.kernels.gather_matmul import gather_matmul as _gather_matmul_pallas
 
@@ -44,7 +49,16 @@ def bcoo_spmm(blocks, sel, row_ids, col_ids, h, *, n_row_blocks, bm, bk,
     if d % bd:
         # A tuned bd from a pow2 shape bucket may not divide this exact d;
         # fall back to the largest common tile rather than failing dispatch.
-        bd = math.gcd(bd, d)
+        # Counted + logged once per (bd, d): a persistent fallback means the
+        # tuned tile never actually serves this shape.
+        fell = math.gcd(bd, d)
+        obs.get_registry().counter("autotune.bd_fallback", bd=bd, d=d)
+        if (bd, d) not in _bd_fallback_logged:
+            _bd_fallback_logged.add((bd, d))
+            logger.info(
+                "tuned bd=%d does not divide d=%d; dispatching gcd tile "
+                "bd=%d instead", bd, d, fell)
+        bd = fell
     return _bcoo_spmm_pallas(
         blocks, sel, row_ids, col_ids, h,
         n_row_blocks=n_row_blocks, bm=bm, bk=bk, bd=bd, row_ptr=row_ptr,

@@ -75,6 +75,8 @@ def run_gnn(args) -> dict:
         backend=args.backend, eval_mode=args.eval_mode,
         stream_partitions=args.stream_partitions,
         stream_budget_mb=args.stream_budget_mb,
+        stream_resident_mb=args.stream_resident_mb,
+        stream_overlap=args.stream_overlap,
         strict_compiles=args.strict_compiles)
     extra: dict = {}
     if (args.dp > 1 or args.mesh) and not args.minibatch:
@@ -82,6 +84,9 @@ def run_gnn(args) -> dict:
                          "source partitions the subgraph pool)")
     if args.compress_grads and not (args.dp > 1 or args.mesh):
         raise SystemExit("--compress-grads compresses the data-parallel "
+                         "all-reduce; it needs --dp N (or --mesh)")
+    if args.overlap_allreduce and not (args.dp > 1 or args.mesh):
+        raise SystemExit("--overlap-allreduce buckets the data-parallel "
                          "all-reduce; it needs --dp N (or --mesh)")
     if args.minibatch:
         mesh = None
@@ -104,6 +109,7 @@ def run_gnn(args) -> dict:
             autotune=not args.no_autotune,
             saint_norm=not args.no_saint_norm,
             dp=args.dp, compress_grads=args.compress_grads,
+            overlap_allreduce=args.overlap_allreduce,
             **common)
         tr = MinibatchTrainer(cfg, g, mesh=mesh)
     else:
@@ -121,6 +127,7 @@ def run_gnn(args) -> dict:
             planner = tr.engine.planner
             extra["dp"] = args.dp
             extra["compress_grads"] = args.compress_grads
+            extra["overlap_allreduce"] = args.overlap_allreduce
             if hasattr(planner, "per_shard_summary"):
                 extra["shards"] = planner.per_shard_summary()
     snap = obs.finalize_from_args(args)
@@ -210,6 +217,12 @@ def main():
     g.add_argument("--stream-budget-mb", type=float, default=256.0,
                    help="device-memory budget per streaming-eval "
                         "partition")
+    g.add_argument("--stream-resident-mb", type=float, default=0.0,
+                   help="device-resident partition LRU budget for "
+                        "streaming eval (0 = re-upload tiles every layer)")
+    g.add_argument("--stream-overlap", action="store_true",
+                   help="double-buffer streaming-eval partition uploads "
+                        "against the device SpMM")
     g.add_argument("--minibatch", action="store_true",
                    help="GraphSAINT subgraph-pool training (pipeline/)")
     g.add_argument("--subgraphs", type=int, default=8)
@@ -233,6 +246,10 @@ def main():
     g.add_argument("--compress-grads", action="store_true",
                    help="int8 error-feedback compression on the DP "
                         "gradient all-reduce (switch-back applies)")
+    g.add_argument("--overlap-allreduce", action="store_true",
+                   help="bucket the DP gradient all-reduce (one pmean "
+                        "per bucket) so communication overlaps the "
+                        "backward tail; trajectory-identical")
     g.add_argument("--force-host-devices", type=int, default=0,
                    help="simulate N CPU devices (sets XLA_FLAGS before "
                         "jax initializes)")

@@ -70,6 +70,8 @@ class MinibatchConfig(TrainConfig):
     dp: int = 0                      # 0/1 = single device; N = shards
     compress_grads: bool = False     # int8 EF compression on the all-reduce
     compress_block: int = 128
+    overlap_allreduce: bool = False  # per-bucket pmean over grad buckets
+    overlap_buckets: int = 4
 
 
 def tune_buckets(pool: SubgraphPool, cfg, dims: dict[str, int],
@@ -306,7 +308,9 @@ def minibatch_engine(cfg: MinibatchConfig, graph: GraphData | None = None,
             mesh=mesh) if cfg.rsc else None
         return Engine(cfg, source, planner=planner, mesh=mesh,
                       compress_grads=cfg.compress_grads,
-                      compress_block=cfg.compress_block, graph=graph)
+                      compress_block=cfg.compress_block,
+                      overlap_allreduce=cfg.overlap_allreduce,
+                      overlap_buckets=cfg.overlap_buckets, graph=graph)
 
     source = PooledSource(pool, cfg)
     planner = PooledPlanner(

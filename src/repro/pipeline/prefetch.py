@@ -108,7 +108,10 @@ class Prefetcher:
                 ops = self._fetch(sid)
             else:
                 ops = device_operands(self.pool, self.pool.subgraphs[sid])
-            jax.block_until_ready(ops.features)
+            # Custom fetchers may return any pytree of device arrays (the
+            # streaming-inference loader yields operand tuples), not just
+            # GraphOperands.
+            jax.block_until_ready(getattr(ops, "features", ops))
         dt = time.perf_counter() - t0
         self.upload_seconds += dt
         self.uploads += 1

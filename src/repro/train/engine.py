@@ -80,6 +80,8 @@ class TrainConfig:
     eval_mode: str = "auto"
     stream_partitions: int = 0       # 0 = size by stream_budget_mb
     stream_budget_mb: float = 256.0
+    stream_resident_mb: float = 0.0  # >0: device partition LRU budget
+    stream_overlap: bool = False     # double-buffer partition uploads
     # Checkpointing (optional): save (params, opt_state) every N global
     # steps to ckpt_dir. Engine.restore() resumes STEP-EXACTLY when the
     # checkpoint carries engine state (planner clocks, pool cursor, RNG
@@ -250,12 +252,16 @@ class DataParallelRunner:
 
     def __init__(self, module, opt, dims, names, *, dropout: float,
                  backend: str, mesh, axis: str = "data",
-                 compress_block: int = 128):
+                 compress_block: int = 128,
+                 overlap_allreduce: bool = False,
+                 overlap_buckets: int = 4):
         from functools import partial
 
         rsc_step, exact_step, eval_logits = make_dp_gnn_steps(
             module, opt, dims, names, dropout=dropout, backend=backend,
-            mesh=mesh, axis=axis, compress_block=compress_block)
+            mesh=mesh, axis=axis, compress_block=compress_block,
+            overlap_allreduce=overlap_allreduce,
+            overlap_buckets=overlap_buckets)
         self.mesh = mesh
         self.axis = axis
         self.n_devices = int(mesh.shape[axis])
@@ -382,7 +388,9 @@ class Engine:
 
     def __init__(self, cfg: TrainConfig, source, *, planner=None,
                  mesh=None, compress_grads: bool = False,
-                 compress_block: int = 128, graph=None):
+                 compress_block: int = 128,
+                 overlap_allreduce: bool = False,
+                 overlap_buckets: int = 4, graph=None):
         self.cfg = cfg
         self.source = source
         self.module = MODELS[cfg.model]
@@ -423,7 +431,9 @@ class Engine:
             self.runner = DataParallelRunner(
                 self.module, self.opt, dims, names,
                 dropout=cfg.dropout, backend=cfg.backend, mesh=mesh,
-                compress_block=compress_block)
+                compress_block=compress_block,
+                overlap_allreduce=overlap_allreduce,
+                overlap_buckets=overlap_buckets)
         else:
             self.runner = SingleDeviceRunner(
                 self.module, self.opt, dims, names,
@@ -465,7 +475,9 @@ class Engine:
                     memory_budget_mb=(None if cfg.stream_partitions
                                       else cfg.stream_budget_mb),
                     backend=cfg.backend,
-                    degree_sort=cfg.degree_sort))
+                    degree_sort=cfg.degree_sort,
+                    resident_mb=cfg.stream_resident_mb or None,
+                    overlap=cfg.stream_overlap))
             # One compile per (layer, mode) — checked against the total
             # once the lazily-built StreamingInference exists.
             se = self.stream_eval

@@ -144,9 +144,61 @@ def _stack_shard(tree):
     return jax.tree.map(lambda x: x[None], tree)
 
 
+def _bucketed_pmean(grads, axis: str, n_buckets: int):
+    """All-reduce the gradient pytree as ``n_buckets`` flat buckets.
+
+    Leaves are flattened in tree order and split at even cumulative-size
+    boundaries; each bucket concatenates to ONE flat f32 vector and issues
+    ONE ``pmean``. Backward-pass/communication overlap follows: the last
+    gradients a backward pass produces are the FIRST layers' (reverse-mode
+    order), so with per-bucket collectives XLA's scheduler can launch the
+    all-reduce of already-finished buckets while the backward tail is
+    still computing — one monolithic reduce (or one barrier-like
+    ``tree.map`` of per-leaf reduces the compiler chooses to fuse) cannot
+    start until every gradient exists.
+
+    Trajectory identity with the per-leaf path is exact, not approximate:
+    ``pmean`` is an elementwise mean over devices, so mean-then-split ==
+    split-then-mean bit-for-bit (all-f32 accumulation both ways). The
+    compressed path keeps identity because quantization happens PER LEAF
+    before bucketing — int8 block codes never straddle a bucket boundary.
+    """
+    leaves, treedef = jax.tree.flatten(grads)
+    if len(leaves) <= 1:
+        return jax.tree.map(lambda g: jax.lax.pmean(g, axis), grads)
+    n_buckets = max(1, min(n_buckets, len(leaves)))
+    sizes = [l.size for l in leaves]
+    total = sum(sizes)
+    buckets: list[list[int]] = []
+    cur: list[int] = []
+    acc = 0
+    for i, s in enumerate(sizes):
+        cur.append(i)
+        acc += s
+        if (len(buckets) < n_buckets - 1
+                and acc * n_buckets >= total * (len(buckets) + 1)):
+            buckets.append(cur)
+            cur = []
+    if cur:
+        buckets.append(cur)
+    out: list = [None] * len(leaves)
+    for idx in buckets:
+        flat = jnp.concatenate(
+            [leaves[i].reshape(-1).astype(jnp.float32) for i in idx])
+        red = jax.lax.pmean(flat, axis)
+        off = 0
+        for i in idx:
+            out[i] = (red[off: off + sizes[i]]
+                      .reshape(leaves[i].shape).astype(leaves[i].dtype))
+            off += sizes[i]
+    return jax.tree.unflatten(treedef, out)
+
+
 def make_dp_gnn_steps(module, opt, dims: dict[str, int], rsc_names,
                       *, dropout: float, backend: str, mesh,
-                      axis: str = "data", compress_block: int = 128):
+                      axis: str = "data", compress_block: int = 128,
+                      overlap_allreduce: bool = False,
+                      overlap_buckets: int = 4):
     """Build data-parallel (rsc_step, exact_step, eval_logits).
 
     The returned steps take operand/plan/key pytrees STACKED along a leading
@@ -170,6 +222,12 @@ def make_dp_gnn_steps(module, opt, dims: dict[str, int], rsc_names,
     caches refresh from their own shard's gradients. The loss is the pmean
     over shards. ``eval_logits`` is the plain single-device evaluator —
     pooled evaluation streams subgraphs through one device.
+
+    ``overlap_allreduce`` swaps the per-leaf ``pmean`` for
+    :func:`_bucketed_pmean` over ``overlap_buckets`` buckets — the
+    all-reduce of finished buckets overlaps the backward tail, with a
+    bit-identical trajectory (see that docstring for why identity is
+    exact, compressed or not).
     """
     rsc_grads, exact_grads, eval_logits = make_gnn_grads(
         module, dims, rsc_names, dropout=dropout, backend=backend)
@@ -178,7 +236,10 @@ def make_dp_gnn_steps(module, opt, dims: dict[str, int], rsc_names,
     def _reduce(grads, err, compress: bool):
         if compress:
             grads, err = ef.compress(grads, err)
-        grads = jax.tree.map(lambda g: jax.lax.pmean(g, axis), grads)
+        if overlap_allreduce:
+            grads = _bucketed_pmean(grads, axis, overlap_buckets)
+        else:
+            grads = jax.tree.map(lambda g: jax.lax.pmean(g, axis), grads)
         return grads, err
 
     def _apply(params, opt_state, grads):

@@ -1,0 +1,204 @@
+"""Dense-lowering SpMM backend + multi-backend autotuned dispatch:
+parity vs the segment_sum oracle (incl. epilogue grads and empty rows),
+the ``auto`` signature namespace picking-and-serving a backend, and the
+autotune-miss counter."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.plan import build_plan, full_plan
+from repro.core.rsc_spmm import exact_plan, rsc_spmm, spmm_apply, \
+    transpose_bcoo
+from repro.kernels import autotune
+from repro.kernels.dense_spmm import dense_lowering, dense_spmm
+from repro.kernels.ref import bcoo_spmm_ref
+from repro.sparse.bcoo import csr_to_bcoo
+from repro.sparse.topology import sym_normalize
+
+from tests.conftest import random_csr
+
+
+def _plan_operands(n, density, seed, bm=8, keep_frac=None):
+    csr = sym_normalize(random_csr(n, density, seed=seed))
+    a, meta = csr_to_bcoo(csr, bm=bm, bk=bm)
+    if keep_frac is None:
+        plan = full_plan(meta, a.n_row_blocks, a.s_total, bucket=4)
+    else:
+        keep = np.zeros(a.n_col_blocks, bool)
+        keep[: max(1, int(keep_frac * a.n_col_blocks))] = True
+        plan = build_plan(meta, keep, a.n_row_blocks, a.s_total, bucket=4)
+    return a, plan
+
+
+def _ref(a, plan, h):
+    return np.asarray(
+        bcoo_spmm_ref(a.blocks, plan.sel, plan.row_ids, plan.col_ids, h,
+                      n_row_blocks=a.n_row_blocks, bm=a.bm, bk=a.bk))
+
+
+# ------------------------------------------------------------ parity
+
+@pytest.mark.parametrize("density,keep_frac", [
+    (0.05, None), (0.05, 0.5), (0.2, None), (0.2, 0.25), (0.5, 0.8)])
+def test_dense_matches_ref(density, keep_frac):
+    """Scatter-into-dense + one matmul == segment_sum oracle across
+    densities and sampled plans (sentinel + padding rows dropped)."""
+    a, plan = _plan_operands(64, density, seed=1, keep_frac=keep_frac)
+    rng = np.random.default_rng(2)
+    h = jnp.asarray(rng.standard_normal((a.n_cols, 24)).astype(np.float32))
+    out = dense_spmm(a.blocks, plan.sel, plan.row_ids, plan.col_ids, h,
+                     n_row_blocks=a.n_row_blocks, bm=a.bm, bk=a.bk)
+    np.testing.assert_allclose(np.asarray(out), _ref(a, plan, h),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("bias,residual,relu", [
+    (True, False, False), (False, True, True), (True, True, True)])
+def test_dense_epilogue_matches_composition(bias, residual, relu):
+    """Fused bias/residual/ReLU epilogue on the dense backend == oracle
+    followed by the unfused ops (same contract as every other backend)."""
+    a, plan = _plan_operands(64, 0.15, seed=5)
+    rng = np.random.default_rng(6)
+    d = 16
+    h = jnp.asarray(rng.standard_normal((a.n_cols, d)).astype(np.float32))
+    b = (jnp.asarray(rng.standard_normal(d).astype(np.float32))
+         if bias else None)
+    r = (jnp.asarray(rng.standard_normal((a.n_rows, d)).astype(np.float32))
+         if residual else None)
+    out = spmm_apply(a.blocks, plan, h, a.n_row_blocks, a.bm, a.bk,
+                     "dense", bias=b, residual=r, relu=relu)
+    ref = _ref(a, plan, h)
+    if bias:
+        ref = ref + np.asarray(b)[None, :]
+    if residual:
+        ref = ref + np.asarray(r)
+    if relu:
+        ref = np.maximum(ref, 0.0)
+    np.testing.assert_allclose(np.asarray(out), ref, atol=1e-5, rtol=1e-5)
+
+
+def test_dense_empty_rows_and_duplicates():
+    """Row blocks with no tiles come out exactly zero, and duplicate
+    (row, col) coordinates accumulate (segment_sum semantics)."""
+    bm = bk = 8
+    blocks = jnp.asarray(np.concatenate(
+        [np.ones((2, bm, bk), np.float32),
+         np.zeros((1, bm, bk), np.float32)]))
+    sel = jnp.asarray(np.array([0, 1, 0], np.int32))
+    rows = jnp.asarray(np.array([0, 3, 0], np.int32))   # rows 1, 2 empty;
+    cols = jnp.asarray(np.array([0, 1, 0], np.int32))   # (0, 0) duplicated
+    h = jnp.asarray(np.ones((2 * bk, 4), np.float32))
+    out = np.asarray(dense_spmm(blocks, sel, rows, cols, h, n_row_blocks=4,
+                                bm=bm, bk=bk))
+    assert np.allclose(out[:bm], 2 * bk)       # duplicate accumulated
+    assert np.allclose(out[bm:3 * bm], 0.0)    # empty rows exactly zero
+    assert np.allclose(out[3 * bm:], bk)
+
+
+def test_dense_lowering_drops_padding_rows():
+    """Plan padding entries carry row_id == n_row_blocks; the scatter must
+    drop them (mode="drop"), not wrap or corrupt real rows."""
+    bm = bk = 4
+    blocks = jnp.asarray(np.concatenate(
+        [np.ones((1, bm, bk), np.float32),
+         np.zeros((1, bm, bk), np.float32)]))
+    sel = jnp.asarray(np.array([0, 0], np.int32))
+    rows = jnp.asarray(np.array([0, 2], np.int32))   # second is padding
+    cols = jnp.asarray(np.array([0, 0], np.int32))
+    dense = np.asarray(dense_lowering(blocks, sel, rows, cols,
+                                      n_row_blocks=2, n_col_blocks=1,
+                                      bm=bm, bk=bk))
+    assert dense.shape == (2 * bm, bk)
+    assert np.allclose(dense[:bm], 1.0)
+    assert np.allclose(dense[bm:], 0.0)       # padding dropped
+
+
+def test_dense_backend_gradients_match_stream():
+    """custom_vjp around spmm_apply is backend-agnostic: fwd on the dense
+    lowering with full epilogue gives bit-comparable grads to the
+    streaming backend (same sampled-backward exact plan)."""
+    a, _ = _plan_operands(48, 0.2, seed=7)
+    at = transpose_bcoo(a)
+    bwd_plan = exact_plan(at)
+    rng = np.random.default_rng(8)
+    d = 12
+    h = jnp.asarray(rng.standard_normal((a.n_cols, d)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal(d).astype(np.float32))
+    r = jnp.asarray(rng.standard_normal((a.n_rows, d)).astype(np.float32))
+
+    def loss(backend):
+        def f(h, b, r):
+            return jnp.sum(rsc_spmm(a, at, bwd_plan, h, backend,
+                                    bias=b, residual=r, relu=True) ** 2)
+        return f
+
+    gd = jax.grad(loss("dense"), argnums=(0, 1, 2))(h, b, r)
+    gs = jax.grad(loss("jnp"), argnums=(0, 1, 2))(h, b, r)
+    for x, y in zip(gd, gs):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   atol=1e-5, rtol=1e-5)
+
+
+# ------------------------------------------- autotuned dispatch ("auto")
+
+def test_auto_tune_picks_and_serves_backend(tmp_path):
+    """get_or_tune_auto sweeps every candidate once, caches the winner
+    with its backend recorded in provenance, and spmm_apply("auto")
+    serves exactly that lowering — numerically identical to the oracle."""
+    import json
+
+    path = tmp_path / "tune.json"
+    cache = autotune.reset(path)
+    a, plan = _plan_operands(64, 0.3, seed=9)
+    d = 16
+    kw = dict(bm=a.bm, bk=a.bk, d=d, s_pad=plan.s_pad,
+              n_row_blocks=a.n_row_blocks, n_col_blocks=a.n_col_blocks)
+    cfg = autotune.get_or_tune_auto(**kw)
+    assert cfg.backend in autotune.auto_backends()
+    assert cache.stats.sweeps == len(autotune.auto_backends())
+    # the persisted entry records the dispatch decision
+    sig = autotune.signature("auto", **kw)
+    raw = json.loads(path.read_text())["entries"][sig]
+    assert autotune.canonical_backend(raw["backend"]) == cfg.backend
+    # warm query: served from cache, no re-sweep, same decision
+    cfg2 = autotune.get_or_tune_auto(**kw)
+    assert cache.stats.sweeps == len(autotune.auto_backends())
+    assert cfg2.backend == cfg.backend
+    # spmm_apply(backend="auto") routes through the cached winner
+    rng = np.random.default_rng(10)
+    h = jnp.asarray(rng.standard_normal((a.n_cols, d)).astype(np.float32))
+    out = spmm_apply(a.blocks, plan, h, a.n_row_blocks, a.bm, a.bk, "auto")
+    np.testing.assert_allclose(np.asarray(out), _ref(a, plan, h),
+                               atol=1e-5, rtol=1e-5)
+    autotune.reset()
+
+
+def test_auto_cold_cache_falls_back_to_stream(tmp_path):
+    """With no cached decision, "auto" must not stall a trace on a sweep:
+    it serves the heuristic default (streaming) and stays exact."""
+    autotune.reset(tmp_path / "tune.json")
+    a, plan = _plan_operands(48, 0.2, seed=11)
+    rng = np.random.default_rng(12)
+    h = jnp.asarray(rng.standard_normal((a.n_cols, 8)).astype(np.float32))
+    out = spmm_apply(a.blocks, plan, h, a.n_row_blocks, a.bm, a.bk, "auto")
+    np.testing.assert_allclose(np.asarray(out), _ref(a, plan, h),
+                               atol=1e-5, rtol=1e-5)
+    autotune.reset()
+
+
+def test_autotune_miss_counter_and_log_once(tmp_path):
+    """A lookup miss bumps ``autotune.miss{sig}`` every time but logs only
+    once per signature (cold caches visible without log spam)."""
+    autotune.reset(tmp_path / "tune.json")
+    obs.reset(metrics=True)
+    try:
+        sig = "auto|bm8|bk8|d16|s32|rb4|dens1"
+        autotune.lookup(sig, d=16)
+        autotune.lookup(sig, d=16)
+        reg = obs.get_registry()
+        assert reg.get_counter("autotune.miss", sig=sig) == 2.0
+    finally:
+        obs.reset()
+        autotune.reset()

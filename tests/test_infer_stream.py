@@ -275,3 +275,120 @@ def test_contiguous_block_partition_budget():
                                         n_parts=3)
     assert len(parts3) == 3
     assert np.array_equal(np.concatenate(parts3), np.arange(8))
+
+
+# --------------------- device-resident LRU & overlap ----------------------
+
+@pytest.mark.parametrize("n_parts", [1, 3, 5])
+def test_stream_lru_exact_across_partition_counts(graph, n_parts):
+    """A device-resident partition LRU is a pure caching layer: with a
+    generous budget every forward stays bit-identical to the uncached
+    path, and the second forward hits for every (layer, partition)."""
+    params = _params(graph, "gcn", 2)
+    base = StreamingInference(graph, "gcn", params, StreamConfig(
+        block=32, n_partitions=n_parts, memory_budget_mb=None))
+    lru = StreamingInference(graph, "gcn", params, StreamConfig(
+        block=32, n_partitions=n_parts, memory_budget_mb=None,
+        resident_mb=64.0))
+    np.testing.assert_array_equal(np.asarray(lru.forward()),
+                                  np.asarray(base.forward()))
+    # statics are keyed (mode, partition), not per layer: layer 2 already
+    # hits what layer 1 uploaded, so a cold 2-layer forward is n_parts
+    # misses + n_parts hits
+    assert lru.lru.misses == n_parts
+    assert lru.lru.hits == n_parts
+    h1 = lru.lru.hit_rate()
+    np.testing.assert_array_equal(np.asarray(lru.forward()),
+                                  np.asarray(base.forward()))
+    assert lru.lru.hits == 3 * n_parts         # warm pass: all hits
+    assert lru.lru.hit_rate() > h1
+    assert lru.lru.evictions == 0
+
+
+def test_stream_lru_eviction_stays_exact(graph):
+    """A budget far below the working set forces evictions on every pass;
+    correctness must not depend on what happens to be resident."""
+    params = _params(graph, "gcn", 2)
+    base = StreamingInference(graph, "gcn", params, StreamConfig(
+        block=32, n_partitions=5, memory_budget_mb=None))
+    tiny = StreamingInference(graph, "gcn", params, StreamConfig(
+        block=32, n_partitions=5, memory_budget_mb=None,
+        resident_mb=0.05))
+    np.testing.assert_array_equal(np.asarray(tiny.forward()),
+                                  np.asarray(base.forward()))
+    assert tiny.lru.evictions > 0
+    assert tiny.lru.resident_bytes <= max(
+        tiny.lru.budget_bytes, max(tiny.lru._bytes.values()))
+
+
+def test_stream_lru_cleared_on_operand_rebuild(graph):
+    """rebuild_operand (edge updates, server path) must invalidate the
+    device cache — stale tiles would silently poison every later query."""
+    params = _params(graph, "gcn", 2)
+    si = StreamingInference(graph, "gcn", params, StreamConfig(
+        block=32, n_partitions=3, memory_budget_mb=None,
+        resident_mb=64.0))
+    si.forward()
+    assert len(si.lru._entries) > 0
+    adj = graph.adj
+    u = 7
+    nbrs = set(adj.col[adj.rowptr[u]: adj.rowptr[u + 1]].tolist())
+    v = next(x for x in range(graph.n) if x != u and x not in nbrs)
+    from repro.infer.serve import _edit_csr
+    new_adj = _edit_csr(si.adj, np.asarray([[si.pos[u], si.pos[v]]]),
+                        np.empty((0, 2), np.int64))
+    si.rebuild_operand(new_adj)
+    assert len(si.lru._entries) == 0
+    g2 = copy.copy(graph)
+    g2.adj = _edit_csr(graph.adj, np.asarray([[u, v]]),
+                       np.empty((0, 2), np.int64))
+    si2 = StreamingInference(g2, "gcn", params, StreamConfig(
+        block=32, n_partitions=3, memory_budget_mb=None))
+    ref = si2.forward()
+    got = si.forward()
+    all_ids = np.arange(graph.n)
+    np.testing.assert_allclose(np.asarray(got)[si.pos[all_ids]],
+                               np.asarray(ref)[si2.pos[all_ids]],
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("resident_mb", [None, 64.0])
+def test_stream_overlap_bit_identical(graph, resident_mb):
+    """Double-buffered partition upload (prefetch thread) reorders only
+    host→device copies, never the math: logits must be bit-identical to
+    the serial path, with and without the LRU underneath."""
+    params = _params(graph, "gcn", 2)
+    base = StreamingInference(graph, "gcn", params, StreamConfig(
+        block=32, n_partitions=5, memory_budget_mb=None))
+    ovl = StreamingInference(graph, "gcn", params, StreamConfig(
+        block=32, n_partitions=5, memory_budget_mb=None,
+        overlap=True, resident_mb=resident_mb))
+    np.testing.assert_array_equal(np.asarray(ovl.forward()),
+                                  np.asarray(base.forward()))
+    np.testing.assert_array_equal(np.asarray(ovl.forward()),
+                                  np.asarray(base.forward()))
+
+
+def test_server_recompute_with_lru_stays_exact(graph):
+    """Incremental dirty-set recompute goes through ad-hoc partitions
+    (never LRU-keyed); with the LRU enabled the post-update embeddings
+    must still match a fresh full forward."""
+    params = _params(graph, "gcn", 2, batchnorm=False)
+    cfg = StreamConfig(block=32, n_partitions=3, memory_budget_mb=None,
+                       resident_mb=64.0)
+    srv = NodeServer(graph, "gcn", params, cfg)
+    adj = graph.adj
+    u = 11
+    nbrs = set(adj.col[adj.rowptr[u]: adj.rowptr[u + 1]].tolist())
+    v = next(x for x in range(graph.n) if x != u and x not in nbrs)
+    srv.update_edges(add=[(u, v)])
+
+    g2 = copy.copy(graph)
+    from repro.infer.serve import _edit_csr
+    g2.adj = _edit_csr(graph.adj, np.asarray([[u, v]]),
+                       np.empty((0, 2), np.int64))
+    si2 = StreamingInference(g2, "gcn", params, cfg)
+    ref = si2.forward()
+    all_ids = np.arange(graph.n)
+    np.testing.assert_allclose(srv.query(all_ids), ref[si2.pos[all_ids]],
+                               rtol=1e-4, atol=1e-5)

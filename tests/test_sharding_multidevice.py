@@ -163,6 +163,16 @@ for epoch in range(cfg.epochs):
 out["ref_losses"] = ref_losses
 out["max_param_diff"] = max_diff(tr.engine.params, params)
 
+# -------- overlapped (bucketed) all-reduce: trajectory-identical ---------
+# pmean is an elementwise mean, so per-bucket concat-reduce-split must
+# reproduce the per-leaf path bit for bit — same losses, same params.
+cfg_o = MinibatchConfig(dp=4, rsc=False, overlap_allreduce=True,
+                        overlap_buckets=3, **common)
+tr_o = MinibatchTrainer(cfg_o, g, pool=pool)
+res_o = tr_o.train(eval_every=3)
+out["overlap_losses"] = res_o["history"]["loss"]
+out["overlap_param_diff"] = max_diff(tr_o.engine.params, tr.engine.params)
+
 # -------- single RSC step: shard_map vs per-shard grads, shared plans ----
 cfg_r = MinibatchConfig(dp=4, rsc=True, **common)
 tr_r = MinibatchTrainer(cfg_r, g, pool=pool)
@@ -214,6 +224,15 @@ out["max_err"] = max(float(np.max(np.abs(e)))
                      for e in jax.tree.leaves(err_dev))
 out["max_grad"] = max(float(jnp.max(jnp.abs(g)))
                       for g in jax.tree.leaves(grads)) or 1.0
+
+# -------- overlap + compression: int8 codes are per-leaf, so bucketing
+# the dequantized floats cannot change the step --------
+cfg_co = MinibatchConfig(dp=4, rsc=False, compress_grads=True,
+                         overlap_allreduce=True, overlap_buckets=3,
+                         **common)
+tr_co = MinibatchTrainer(cfg_co, g, pool=pool)
+p1_o, _, _ = tr_co.engine.runner.exact_step(p0, o0, ops_stacked, sub0, True)
+out["overlap_compress_param_diff"] = max_diff(p1_o, p1)
 
 # -------- RSC + compression + switch-back end to end --------
 # 5 epochs => 10 global steps, 8 of them rsc: every subgraph gets >= 3
@@ -304,3 +323,18 @@ def test_dp_switchback_applies_to_compressor(dp_result):
     # compressor and RSC switch back on the same schedule
     assert all((m == "rsc") == c for m, c in zip(modes, comp))
     assert dp_result["dp_hit_rate"] > 0
+
+
+def test_dp_overlapped_allreduce_trajectory_identical(dp_result):
+    """Bucketed (overlapped) all-reduce is a pure re-association of the
+    per-leaf pmean: concat-reduce-split over f32 buckets is bit-for-bit
+    the same mean, so the whole training trajectory must match exactly."""
+    assert dp_result["overlap_param_diff"] == 0.0
+    assert list(dp_result["overlap_losses"]) == list(dp_result["dp_losses"])
+
+
+def test_dp_overlapped_compressed_allreduce_identical(dp_result):
+    """int8 EF compression quantizes per leaf BEFORE bucketing, so block
+    codes never straddle bucket boundaries and the overlapped compressed
+    step reproduces the unbucketed compressed step exactly."""
+    assert dp_result["overlap_compress_param_diff"] == 0.0
