@@ -1,0 +1,240 @@
+"""Serving-tier benchmark: snapshot frontend vs blocking baseline, and
+incremental vs full re-tiling.
+
+One JSON report (schema ``rsc/bench_serve/v1``, written to ``--out``,
+default repo-root ``BENCH_serve.json`` — schema-checked in CI like the
+SpMM / minibatch / infer reports):
+
+* ``latency``: query throughput and p50/p99 latency under three edge-update
+  rates (``none`` / ``low`` / ``high``) for two serving designs —
+  ``snapshot`` (the :class:`ServeFrontend`: versioned snapshots, write-ahead
+  update log, one replica rebuilding at a time) against ``blocking`` (one
+  server, one lock shared by queries and full-rebuild updates — the design
+  the snapshot protocol replaces);
+* ``retile``: host-side incremental ``retile_rows`` vs full
+  ``csr_to_bcoo_host`` rebuild time across dirty-set sizes, with a
+  bit-identity check of the resulting operands.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench \
+        [--scale 0.004] [--tiny] [--out BENCH_serve.json]
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+import json
+import sys
+import threading
+import time
+from pathlib import Path
+
+SCHEMA = "rsc/bench_serve/v1"
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def parse_args():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="reddit")
+    ap.add_argument("--scale", type=float, default=0.02)
+    ap.add_argument("--model", default="gcn")
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--hidden", type=int, default=64)
+    ap.add_argument("--block", type=int, default=32)
+    ap.add_argument("--partitions", type=int, default=4)
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--query-batch", type=int, default=32)
+    ap.add_argument("--duration", type=float, default=3.0,
+                    help="seconds of query load per (design, rate) cell")
+    ap.add_argument("--out", default=str(REPO_ROOT / "BENCH_serve.json"))
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: smallest graph/duration that still "
+                         "exercises every section")
+    args = ap.parse_args()
+    if args.tiny:
+        args.scale = 0.002
+        args.duration = 0.8
+        args.partitions = 2
+    return args
+
+
+class BlockingServer:
+    """The pre-snapshot design: ONE lock shared by queries and full-rebuild
+    (non-incremental) updates. Queries stall for the whole rebuild."""
+
+    def __init__(self, graph, model, params, cfg):
+        from repro.infer import NodeServer
+        self.srv = NodeServer(graph, model, params, cfg, incremental=False)
+        self.lock = threading.Lock()
+
+    def query(self, ids):
+        with self.lock:
+            return self.srv.query(ids)
+
+    def update_edges(self, add=(), remove=()):
+        with self.lock:
+            return self.srv.update_edges(add=add, remove=remove)
+
+
+def drive_cell(query_fn, update_fn, interval, duration, ids_fn):
+    """One (design, rate) cell: a query loop for ``duration`` seconds with
+    an update thread firing every ``interval`` seconds (None = no updates).
+    Returns (latencies_s, n_updates)."""
+    import numpy as np
+
+    stop = threading.Event()
+    n_updates = [0]
+
+    def updater():
+        while not stop.wait(interval):
+            update_fn()
+            n_updates[0] += 1
+
+    t = None
+    if interval is not None:
+        t = threading.Thread(target=updater, daemon=True)
+        t.start()
+    lat = []
+    t_end = time.perf_counter() + duration
+    while time.perf_counter() < t_end:
+        ids = ids_fn()
+        t0 = time.perf_counter()
+        query_fn(ids)
+        lat.append(time.perf_counter() - t0)
+    stop.set()
+    if t is not None:
+        t.join(timeout=60.0)
+    return np.asarray(lat), n_updates[0]
+
+
+def main():
+    args = parse_args()
+    import jax
+    import numpy as np
+
+    from repro.graphs.datasets import load_dataset
+    from repro.infer import ServeFrontend, StreamConfig
+    from repro.infer.serve import _edit_csr
+    from repro.models.gnn import MODELS
+    from repro.sparse.bcoo import csr_to_bcoo_host, retile_rows
+
+    g = load_dataset(args.dataset, scale=args.scale, seed=0)
+    params = MODELS[args.model].init(
+        jax.random.PRNGKey(0), g.features.shape[1], args.hidden,
+        g.num_classes, args.layers, False)
+    cfg = StreamConfig(block=args.block, n_partitions=args.partitions,
+                       memory_budget_mb=None, store_layers=True)
+
+    rng = np.random.default_rng(0)
+    # localized updates: low-degree endpoints keep the dirty set small
+    deg = g.adj.row_nnz()
+    low_nodes = np.argsort(deg)[: max(16, g.n // 16)]
+
+    def random_toggle():
+        u, v = (int(x) for x in rng.choice(low_nodes, 2, replace=False))
+        return (u, v) if u != v else (u, (v + 1) % g.n)
+
+    def ids_fn():
+        return rng.integers(0, g.n, args.query_batch)
+
+    rates = {"none": None, "low": 1.0, "high": 0.05}
+    if args.tiny:
+        rates = {"none": None, "low": 0.4, "high": 0.02}
+
+    latency = {}
+    # ---- snapshot frontend --------------------------------------------
+    fe = ServeFrontend(g, args.model, params, cfg,
+                       replicas=args.replicas, max_batch=4 * args.query_batch)
+    fe.query(ids_fn())                               # warm the path
+    for rate, interval in rates.items():
+        lat, n_upd = drive_cell(
+            lambda ids: fe.query(ids, timeout=120.0),
+            lambda: fe.update_edges(add=[random_toggle()]),
+            interval, args.duration, ids_fn)
+        latency.setdefault("snapshot", {})[rate] = {
+            "qps": round(lat.size / max(lat.sum(), 1e-9), 1),
+            "p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 3),
+            "p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 3),
+            "max_ms": round(float(lat.max()) * 1e3, 3),
+            "updates_issued": n_upd,
+        }
+    backlog = fe.log.latest_seq - fe.min_applied_seq()
+    latency["snapshot"]["update_backlog_at_end"] = backlog
+    fe.close()
+
+    # ---- blocking baseline --------------------------------------------
+    blk = BlockingServer(g, args.model, params, cfg)
+    blk.query(ids_fn())
+    for rate, interval in rates.items():
+        lat, n_upd = drive_cell(
+            blk.query, lambda: blk.update_edges(add=[random_toggle()]),
+            interval, args.duration, ids_fn)
+        latency.setdefault("blocking", {})[rate] = {
+            "qps": round(lat.size / max(lat.sum(), 1e-9), 1),
+            "p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 3),
+            "p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 3),
+            "max_ms": round(float(lat.max()) * 1e3, 3),
+            "updates_issued": n_upd,
+        }
+
+    # ---- incremental vs full re-tile ----------------------------------
+    host, meta = csr_to_bcoo_host(g.adj, bm=args.block, bk=args.block)
+    retile_rows_out = []
+    sizes = [2, 16, 128] if not args.tiny else [2, 16]
+    for n_edges in sizes:
+        us = rng.choice(low_nodes, n_edges, replace=False)
+        vs = rng.choice(g.n, n_edges, replace=False)
+        add = np.stack([us, np.where(vs == us, (vs + 1) % g.n, vs)], 1)
+        new_csr = _edit_csr(g.adj, add.astype(np.int64),
+                            np.empty((0, 2), np.int64))
+        dirty = np.unique(add)
+        # time the serving-path (in-place) retile; the safety copy the
+        # bench needs to reuse `host` across sizes stays untimed
+        work_host, work_meta = copy.deepcopy((host, meta))
+        t0 = time.perf_counter()
+        inc_host, inc_meta = retile_rows(work_host, work_meta, new_csr,
+                                         dirty, in_place=True)
+        t_inc = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        full_host, full_meta = csr_to_bcoo_host(new_csr, bm=args.block,
+                                                bk=args.block)
+        t_full = time.perf_counter() - t0
+        identical = bool(
+            np.array_equal(inc_host.blocks, full_host.blocks)
+            and np.array_equal(inc_host.row_ids, full_host.row_ids)
+            and np.array_equal(inc_host.col_ids, full_host.col_ids)
+            and np.array_equal(inc_meta.col_nnz, full_meta.col_nnz)
+            and np.array_equal(inc_meta.col_block_tiles,
+                               full_meta.col_block_tiles))
+        retile_rows_out.append({
+            "dirty_edges": int(n_edges),
+            "dirty_rows": int(dirty.size),
+            "dirty_row_blocks": int(np.unique(dirty // args.block).size),
+            "total_row_blocks": int(host.n_row_blocks),
+            "incremental_ms": round(t_inc * 1e3, 3),
+            "full_ms": round(t_full * 1e3, 3),
+            "speedup": round(t_full / max(t_inc, 1e-9), 2),
+            "identical": identical,
+        })
+
+    report = {
+        "schema": SCHEMA,
+        "dataset": args.dataset,
+        "scale": args.scale,
+        "nodes": g.n,
+        "edges": g.adj.nnz,
+        "model": args.model,
+        "layers": args.layers,
+        "replicas": args.replicas,
+        "query_batch": args.query_batch,
+        "duration_s": args.duration,
+        "latency": latency,
+        "retile": retile_rows_out,
+    }
+    out_path = Path(args.out)
+    out_path.write_text(json.dumps(report, indent=1) + "\n")
+    print(json.dumps(report, indent=1))
+    print(f"[bench] wrote {out_path}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,14 +1,19 @@
-"""Streaming full-graph inference & node serving.
+"""Streaming full-graph inference & concurrent node serving.
 
 ``stream`` runs an exact (or RSC-sampled) layer-wise forward pass over the
 whole graph one row-partition at a time under a device-memory budget;
-``serve`` caches the resulting activations and answers batched node
-queries, recomputing only the dirty ≤L-hop neighborhood after edge
-updates.
+``serve`` caches the resulting activations behind immutable versioned
+snapshots and answers batched node queries without ever blocking on edge
+updates (dirty ≤L-hop recompute, dirty-bounded incremental re-tiling);
+``frontend`` replicates servers behind a write-ahead update log and a
+query-batching dispatcher with per-query staleness and an RSC-sampled
+latency/accuracy knob.
 """
 from repro.infer.stream import (StreamConfig, StreamEvaluator,
                                 StreamingInference)
-from repro.infer.serve import NodeServer
+from repro.infer.serve import NodeServer, Snapshot
+from repro.infer.frontend import QueryResult, ServeFrontend, UpdateLog
 
-__all__ = ["NodeServer", "StreamConfig", "StreamEvaluator",
-           "StreamingInference"]
+__all__ = ["NodeServer", "QueryResult", "ServeFrontend", "Snapshot",
+           "StreamConfig", "StreamEvaluator", "StreamingInference",
+           "UpdateLog"]

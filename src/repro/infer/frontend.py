@@ -1,0 +1,335 @@
+"""Replicated batching front-end over versioned :class:`NodeServer`s.
+
+The serving tier that takes concurrent traffic: N replicas answer
+snapshot reads while a write-ahead update log feeds them edge updates
+one replica at a time.
+
+* **Write-ahead update log.** ``update_edges`` appends to an in-memory
+  :class:`UpdateLog` and returns immediately with the log sequence
+  number; a background applier drains the log in order, applying each
+  entry to the replicas ROUND-ROBIN — strictly one replica rebuilding at
+  any moment, so the rest of the fleet serves the freshest published
+  version with zero rebuild shadow. Late-built replicas catch up from the
+  log (``UpdateLog.since``).
+* **Query batching.** Queries enter a queue; a dispatcher thread
+  coalesces everything pending (up to ``max_batch`` ids) into ONE
+  vectorized snapshot read against the next replica in rotation
+  (replicas mid-rebuild are skipped — their snapshot would answer too,
+  just staler). The device-side batched calls live on the update path:
+  dirty recompute chunks reuse the one-compile-per-layer padded shapes
+  of ``infer.stream``, so no replica ever retraces under traffic.
+* **Per-query staleness + sampled SLO trade.** Every response carries
+  the answering snapshot's version and its lag behind the log head. A
+  query may pass ``error_budget``: if the frontend runs a sampled
+  replica (``sampled_budget`` < 1) whose measured relative error fits
+  the budget, the query is routed there — sampled replicas rebuild
+  faster (smaller gathers), trading accuracy for freshness/latency
+  explicitly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+
+import numpy as np
+
+from repro import obs
+from repro.graphs.synthetic import GraphData
+from repro.infer.serve import NodeServer
+from repro.infer.stream import StreamConfig
+
+_STOP = object()
+
+
+class UpdateLog:
+    """In-memory write-ahead log of edge-update batches (1-based seq)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._entries: list[tuple[int, np.ndarray, np.ndarray]] = []
+
+    def append(self, add, remove) -> int:
+        add = np.asarray(list(add), dtype=np.int64).reshape(-1, 2)
+        remove = np.asarray(list(remove), dtype=np.int64).reshape(-1, 2)
+        with self._lock:
+            seq = len(self._entries) + 1
+            self._entries.append((seq, add, remove))
+            return seq
+
+    def since(self, seq: int) -> list[tuple[int, np.ndarray, np.ndarray]]:
+        """Entries with sequence number > ``seq`` (replica catch-up)."""
+        with self._lock:
+            return self._entries[seq:]
+
+    @property
+    def latest_seq(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+
+@dataclasses.dataclass
+class QueryResult:
+    """One answered (sub-)query with its consistency metadata."""
+
+    logits: np.ndarray
+    version: int          # snapshot version of the answering replica
+    applied_seq: int      # log seq that snapshot reflects
+    staleness: int        # log entries not yet reflected in the answer
+    replica: str
+    sampled: bool
+    queue_ms: float       # submit → dispatch wait
+
+
+class _Request:
+    __slots__ = ("ids", "sampled", "event", "result", "error", "t_submit")
+
+    def __init__(self, ids: np.ndarray, sampled: bool):
+        self.ids = ids
+        self.sampled = sampled
+        self.event = threading.Event()
+        self.result: QueryResult | None = None
+        self.error: BaseException | None = None
+        self.t_submit = time.perf_counter()
+
+    def wait(self, timeout: float | None) -> QueryResult:
+        if not self.event.wait(timeout):
+            raise TimeoutError("query not answered in time")
+        if self.error is not None:
+            raise self.error
+        return self.result
+
+
+class ServeFrontend:
+    """N exact replicas (+ optional sampled replica) behind one queue."""
+
+    def __init__(self, graph: GraphData, model, params,
+                 cfg: StreamConfig = StreamConfig(), *,
+                 replicas: int = 2, max_batch: int = 256,
+                 sampled_budget: float | None = None,
+                 incremental: bool = True):
+        if replicas < 1:
+            raise ValueError("need at least one replica")
+        self.max_batch = int(max_batch)
+        self.log = UpdateLog()
+        first = NodeServer(graph, model, params, cfg,
+                           incremental=incremental, name="r0")
+        self.replicas = [first] + [
+            NodeServer(graph, model, params, cfg, incremental=incremental,
+                       warm_from=first, name=f"r{i}")
+            for i in range(1, replicas)]
+        self.sampled_server: NodeServer | None = None
+        self.sampled_rel_error = float("inf")
+        if sampled_budget is not None and sampled_budget < 1.0:
+            scfg = dataclasses.replace(cfg, sample_budget=sampled_budget)
+            self.sampled_server = NodeServer(
+                graph, model, params, scfg, sampled=True,
+                incremental=incremental, name="sampled")
+            exact = first._snap.logits[: first.n_nodes]
+            approx = self.sampled_server._snap.logits[: first.n_nodes]
+            self.sampled_rel_error = float(
+                np.linalg.norm(approx - exact)
+                / max(np.linalg.norm(exact), 1e-9))
+            obs.get_registry().gauge("frontend.sampled_rel_error",
+                                     self.sampled_rel_error)
+
+        self._rr = 0
+        self._queue: queue.Queue = queue.Queue()
+        self._apply_cond = threading.Condition()
+        self._applying = False
+        self._error: BaseException | None = None
+        self._closed = False
+        self._dispatcher = threading.Thread(
+            target=self._dispatch_loop, daemon=True, name="serve-dispatch")
+        self._updater = threading.Thread(
+            target=self._update_loop, daemon=True, name="serve-update")
+        self._dispatcher.start()
+        self._updater.start()
+
+    # -------------------------------------------------------------- query
+    def submit(self, node_ids, *, error_budget: float | None = None
+               ) -> _Request:
+        """Enqueue a query; returns a waitable request handle."""
+        self._check_error()
+        ids = np.asarray(node_ids, dtype=np.int64)
+        use_sampled = (error_budget is not None
+                       and self.sampled_server is not None
+                       and error_budget >= self.sampled_rel_error)
+        req = _Request(ids, use_sampled)
+        self._queue.put(req)
+        return req
+
+    def query(self, node_ids, *, error_budget: float | None = None,
+              timeout: float | None = 30.0) -> QueryResult:
+        """Synchronous query through the batching queue."""
+        return self.submit(node_ids, error_budget=error_budget).wait(timeout)
+
+    # ------------------------------------------------------------ updates
+    def update_edges(self, add=(), remove=(), *, wait: bool = False,
+                     timeout: float | None = 60.0) -> int:
+        """Append an update batch to the write-ahead log; the background
+        applier pushes it to the replicas round-robin. Returns the log
+        sequence number; ``wait=True`` blocks until every replica has
+        applied it."""
+        self._check_error()
+        seq = self.log.append(add, remove)
+        with self._apply_cond:
+            self._apply_cond.notify_all()
+        if wait:
+            self.wait_applied(seq, timeout=timeout)
+        return seq
+
+    def min_applied_seq(self) -> int:
+        servers = self.replicas + ([self.sampled_server]
+                                   if self.sampled_server else [])
+        return min(s.applied_seq for s in servers)
+
+    def wait_applied(self, seq: int, timeout: float | None = 60.0) -> None:
+        deadline = (time.perf_counter() + timeout) if timeout else None
+        with self._apply_cond:
+            while self.min_applied_seq() < seq:
+                self._check_error()
+                remaining = (deadline - time.perf_counter()
+                             if deadline else None)
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError(f"update {seq} not applied in time")
+                self._apply_cond.wait(timeout=remaining)
+
+    # ----------------------------------------------------------- internals
+    def _check_error(self):
+        if self._error is not None:
+            raise RuntimeError("serving thread died") from self._error
+
+    def _pick_replica(self) -> NodeServer:
+        """Next exact replica in rotation, skipping one mid-rebuild (its
+        snapshot would answer fine, just staler)."""
+        n = len(self.replicas)
+        for off in range(n):
+            srv = self.replicas[(self._rr + off) % n]
+            if not srv._update_lock.locked():
+                self._rr = (self._rr + off + 1) % n
+                return srv
+        srv = self.replicas[self._rr]
+        self._rr = (self._rr + 1) % n
+        return srv
+
+    def _dispatch_loop(self):
+        reg = obs.get_registry()
+        batch: list[_Request] = []
+        try:
+            while True:
+                req = self._queue.get()
+                if req is _STOP:
+                    return
+                batch = [req]
+                n_ids = req.ids.size
+                while n_ids < self.max_batch:
+                    try:
+                        nxt = self._queue.get_nowait()
+                    except queue.Empty:
+                        break
+                    if nxt is _STOP:
+                        self._queue.put(_STOP)
+                        break
+                    batch.append(nxt)
+                    n_ids += nxt.ids.size
+                latest = self.log.latest_seq
+                for sampled in (False, True):
+                    group = [r for r in batch if r.sampled is sampled]
+                    if not group:
+                        continue
+                    self._answer(group, sampled, latest, reg)
+        except BaseException as e:   # surface on the next caller
+            self._error = e
+            for r in batch:
+                if not r.event.is_set():
+                    r.error = e
+                    r.event.set()
+
+    def _answer(self, group, sampled: bool, latest: int, reg):
+        srv = (self.sampled_server if sampled else self._pick_replica())
+        ids = np.concatenate([r.ids for r in group])
+        t0 = time.perf_counter()
+        out, (version, applied, created) = srv.query(ids, with_meta=True)
+        now = time.perf_counter()
+        reg.observe("frontend.batch_size", float(ids.size),
+                    replica=srv.name)
+        reg.observe("frontend.batch_requests", float(len(group)))
+        reg.observe("frontend.snapshot_age_ms",
+                    max(time.time() - created, 0.0) * 1e3,
+                    replica=srv.name)
+        reg.gauge("frontend.staleness", float(latest - applied),
+                  replica=srv.name)
+        off = 0
+        for r in group:
+            r.result = QueryResult(
+                logits=out[off: off + r.ids.size], version=version,
+                applied_seq=applied, staleness=max(latest - applied, 0),
+                replica=srv.name, sampled=sampled,
+                queue_ms=(t0 - r.t_submit) * 1e3)
+            reg.observe("frontend.queue_wait_ms", r.result.queue_ms,
+                        replica=srv.name)
+            off += r.ids.size
+            r.event.set()
+        reg.observe("frontend.dispatch_ms", (now - t0) * 1e3,
+                    replica=srv.name)
+
+    def _update_loop(self):
+        reg = obs.get_registry()
+        servers = self.replicas + ([self.sampled_server]
+                                   if self.sampled_server else [])
+        try:
+            while True:
+                with self._apply_cond:
+                    while (not self._closed
+                           and self.min_applied_seq()
+                           >= self.log.latest_seq):
+                        self._apply_cond.wait(timeout=0.5)
+                    if self._closed:
+                        return
+                # apply strictly one replica at a time (round-robin over
+                # the fleet) so N-1 replicas always serve un-shadowed
+                for srv in servers:
+                    for seq, add, remove in self.log.since(srv.applied_seq):
+                        t0 = time.perf_counter()
+                        srv.update_edges(add=add, remove=remove, seq=seq)
+                        reg.observe("frontend.rebuild_ms",
+                                    (time.perf_counter() - t0) * 1e3,
+                                    replica=srv.name)
+                        with self._apply_cond:
+                            self._apply_cond.notify_all()
+        except BaseException as e:
+            self._error = e
+            with self._apply_cond:
+                self._apply_cond.notify_all()
+
+    # ------------------------------------------------------------- admin
+    def stats(self) -> dict:
+        servers = self.replicas + ([self.sampled_server]
+                                   if self.sampled_server else [])
+        return {
+            "replicas": len(self.replicas),
+            "max_batch": self.max_batch,
+            "log_seq": self.log.latest_seq,
+            "min_applied_seq": self.min_applied_seq(),
+            "sampled_rel_error": (None if self.sampled_server is None
+                                  else round(self.sampled_rel_error, 6)),
+            "servers": [s.stats() for s in servers],
+        }
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        self._queue.put(_STOP)
+        with self._apply_cond:
+            self._apply_cond.notify_all()
+        self._dispatcher.join(timeout=5.0)
+        self._updater.join(timeout=5.0)
+
+    def __enter__(self) -> "ServeFrontend":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -155,6 +155,16 @@ class _DeviceLRU:
             self.resident_bytes = 0
             self._publish()
 
+    def invalidate(self, keys) -> None:
+        """Drop specific entries (dirty-bounded operand updates evict only
+        the partitions whose tiles changed)."""
+        with self._lock:
+            for key in keys:
+                if key in self._entries:
+                    del self._entries[key]
+                    self.resident_bytes -= self._bytes.pop(key)
+            self._publish()
+
     def hit_rate(self) -> float:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
@@ -259,6 +269,69 @@ class StreamingInference:
             if old_pads.get(mode) != pads:
                 self._layer_fns = {k: v for k, v in self._layer_fns.items()
                                    if k[1] != mode}
+
+    def update_operand(self, adj: CSR, dirty_rows: np.ndarray) -> dict:
+        """Dirty-bounded operand refresh: re-tile ONLY the row blocks whose
+        normalized rows changed (``sparse.bcoo.retile_rows``) and rebuild
+        ONLY the partitions containing them, keeping every other
+        partition's device-ready operands — and the compiled layer
+        functions — untouched.
+
+        ``dirty_rows`` are the LOCAL rows whose Ã row differs between the
+        old and new adjacency (edge endpoints plus their old∪new neighbors
+        under degree renormalization). If a touched partition no longer
+        fits the padded shapes every partition shares (tile growth past
+        ``s_pad``), the method falls back to a full partition re-plan —
+        counted in the returned stats, never silent. Normalization itself
+        stays O(nnz) vectorized numpy; the scatter into tiles, the
+        dominant host cost, is bounded by the dirty rows' nnz.
+        """
+        from repro.sparse.bcoo import retile_rows
+
+        normalize = mean_normalize if self._mean_agg else sym_normalize
+        a_csr = normalize(adj)
+        dirty_rows = np.asarray(dirty_rows, dtype=np.int64)
+        rbs = np.unique(dirty_rows // self.host.bm)
+        self.host, self.meta = retile_rows(self.host, self.meta, a_csr,
+                                           dirty_rows)
+        self.adj = adj
+        touched = [i for i, ids in enumerate(self._partition_id_list)
+                   if np.intersect1d(ids, rbs, assume_unique=True).size]
+        stats = {"dirty_row_blocks": int(rbs.size),
+                 "partitions_touched": len(touched),
+                 "partitions_rebuilt": 0, "fallback": False}
+        for mode in list(self._parts):
+            sampled = mode == "sampled"
+            nb_pad, s_pad, g_pad = self._pads[mode]
+            for i in touched:
+                ids = self._partition_id_list[i]
+                raw = self._raw_partition(ids, sampled)
+                if (ids.shape[0] > nb_pad
+                        or raw[0].shape[0] + nb_pad > s_pad
+                        or raw[3].shape[0] > g_pad):
+                    # grown past the shared padded shapes: full re-plan
+                    # (keeps compiled fns for modes whose pads survive)
+                    old_pads = dict(self._pads)
+                    self._build_partitions()
+                    for m2, pads in self._pads.items():
+                        if old_pads.get(m2) != pads:
+                            self._layer_fns = {
+                                k: v for k, v in self._layer_fns.items()
+                                if k[1] != m2}
+                    if self.lru is not None:
+                        self.lru.clear()
+                    stats["fallback"] = True
+                    stats["partitions_rebuilt"] = sum(
+                        len(p) for p in self._parts.values())
+                    obs.get_registry().counter("stream.update_fallbacks")
+                    return stats
+                self._parts[mode][i] = self._build_one(ids, raw, nb_pad,
+                                                       s_pad, g_pad)
+                stats["partitions_rebuilt"] += 1
+        if self.lru is not None:
+            self.lru.invalidate([(m, i) for m in self._parts
+                                 for i in touched])
+        return stats
 
     # --------------------------------------------------------- partitions
     def _partition_ids(self) -> list[np.ndarray]:
@@ -605,22 +678,25 @@ class StreamingInference:
         return chunks
 
     def recompute_rows(self, dirty_per_layer: list[np.ndarray],
-                       params=None) -> None:
+                       params=None, mode: str = "exact") -> None:
         """Recompute stored activations/logits for the dirty node sets.
 
         ``dirty_per_layer[l]`` are the LOCAL rows whose H^{l+1} changed
         (monotone growing with l, ≤L-hop BFS — see ``infer.serve``).
         Batchnorm statistics are applied FROZEN from the last full pass,
         the standard serving-time semantics. Only dirty node rows are
-        written back, so clean rows stay bit-identical.
+        written back, so clean rows stay bit-identical. ``mode="sampled"``
+        recomputes with the RSC-sampled column gathers (sampled serving
+        replicas: the stores were built by a sampled forward).
         """
         if self.layer_store is None:
             raise RuntimeError("no stored activations: run "
                                "forward(store=True) first")
+        if mode not in self._parts:
+            raise ValueError(f"no {mode!r} partitions built")
         params = params if params is not None else self.params
         module = self.module
         bm = self.host.bm
-        mode = "exact"
         for l in range(self.n_layers):
             dirty = np.asarray(dirty_per_layer[l], dtype=np.int64)
             if dirty.size == 0:
@@ -630,7 +706,7 @@ class StreamingInference:
             pre = module.infer_pre(params, l)
             parts = []
             for chunk in self._chunk_blocks(rbs, mode):
-                raw = self._raw_partition(chunk, sampled=False)
+                raw = self._raw_partition(chunk, sampled=(mode == "sampled"))
                 nb_pad, s_pad, g_pad = self._pads[mode]
                 parts.append(self._build_one(chunk, raw, nb_pad, s_pad,
                                              g_pad))

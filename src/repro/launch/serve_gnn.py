@@ -1,13 +1,18 @@
-"""GNN node-serving driver: streaming-inference cache + batched queries.
+"""GNN node-serving driver: replicated snapshot frontend + batched queries.
 
 Builds (or quickly trains) a model, precomputes full-graph activations via
-partitioned streaming inference, then serves batched node-id queries from
-the cache and demonstrates incremental recompute after edge updates:
+partitioned streaming inference, then stands up a :class:`ServeFrontend`
+(``--replicas`` NodeServers behind a write-ahead update log and a
+query-batching dispatcher) and drives concurrent queries while edge
+updates rebuild replicas one at a time off the read path:
 
     PYTHONPATH=src python -m repro.launch.serve_gnn --dataset reddit \
         --scale 0.002 --model gcn --train-epochs 20 --queries 256 \
-        --memory-budget-mb 64 --update-edges 3
+        --memory-budget-mb 64 --update-edges 3 --replicas 2
 
+``--replicas 0`` falls back to a single bare NodeServer (no frontend
+threads) — the PR-4 sequential path. ``--sampled-budget`` < 1 adds an
+RSC-sampled replica that queries can opt into with an error budget.
 With ``--ckpt-dir`` the params warm-start from the latest checkpoint of a
 previous training run instead of training here.
 """
@@ -22,7 +27,7 @@ import numpy as np
 
 from repro import obs
 from repro.graphs.datasets import DATASETS, load_dataset
-from repro.infer import NodeServer, StreamConfig
+from repro.infer import NodeServer, ServeFrontend, StreamConfig
 from repro.models.gnn import MODELS
 from repro.train.loop import GNNTrainer, TrainConfig
 
@@ -88,6 +93,21 @@ def main():
     ap.add_argument("--query-batch", type=int, default=32)
     ap.add_argument("--update-edges", type=int, default=0,
                     help="insert N random edges and recompute dirty sets")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="exact NodeServer replicas behind the frontend "
+                         "(0 = bare single server, no frontend threads)")
+    ap.add_argument("--max-batch", type=int, default=256,
+                    help="max node ids coalesced into one dispatch")
+    ap.add_argument("--sampled-budget", type=float, default=0.0,
+                    help="add an RSC-sampled replica with this column "
+                         "keep-fraction (<1); queries opt in via an "
+                         "error budget (0 = exact replicas only)")
+    ap.add_argument("--stream-resident-mb", type=float, default=0.0,
+                    help="device-resident partition LRU budget for the "
+                         "streaming forward (0 = re-upload every layer)")
+    ap.add_argument("--stream-overlap", action="store_true",
+                    help="double-buffer partition uploads against the "
+                         "device SpMM during cache builds/rebuilds")
     ap.add_argument("--seed", type=int, default=0)
     obs.add_cli_flags(ap)
     args = ap.parse_args()
@@ -101,39 +121,66 @@ def main():
         n_partitions=args.partitions or None,
         memory_budget_mb=(None if args.partitions
                           else args.memory_budget_mb),
-        backend=args.backend)
-    server = NodeServer(graph, args.model, params, cfg)
+        backend=args.backend,
+        resident_mb=args.stream_resident_mb or None,
+        overlap=args.stream_overlap)
 
     rng = np.random.default_rng(args.seed)
-    t0 = time.perf_counter()
-    n_batches = 0
-    for start in range(0, args.queries, args.query_batch):
-        ids = rng.integers(0, graph.n,
-                           min(args.query_batch, args.queries - start))
-        logits = server.query(ids)
-        assert logits.shape == (ids.shape[0], graph.num_classes) \
-            or graph.multilabel
-        n_batches += 1
-    query_s = time.perf_counter() - t0
+    updates: list[dict] = []
 
-    updates = []
-    if args.update_edges > 0:
-        edges = random_edge_updates(graph, args.update_edges, rng)
-        for e in edges:
-            stats = server.update_edges(add=[e])
-            updates.append({k: (round(v, 6) if isinstance(v, float) else v)
-                            for k, v in stats.items()})
+    def run_queries(query_fn) -> tuple[int, float]:
+        t0 = time.perf_counter()
+        n_batches = 0
+        for start in range(0, args.queries, args.query_batch):
+            ids = rng.integers(0, graph.n,
+                               min(args.query_batch, args.queries - start))
+            logits = query_fn(ids)
+            assert logits.shape == (ids.shape[0], graph.num_classes) \
+                or graph.multilabel
+            n_batches += 1
+        return n_batches, time.perf_counter() - t0
+
+    if args.replicas <= 0:
+        server = NodeServer(graph, args.model, params, cfg)
+        n_batches, query_s = run_queries(server.query)
+        if args.update_edges > 0:
+            for e in random_edge_updates(graph, args.update_edges, rng):
+                stats = server.update_edges(add=[e])
+                updates.append(
+                    {k: (round(v, 6) if isinstance(v, float) else v)
+                     for k, v in stats.items() if k != "retile"})
+        n_parts = server.si.n_partitions
+        build_s = server.build_seconds
+        serve_stats = server.stats()
+    else:
+        frontend = ServeFrontend(
+            graph, args.model, params, cfg, replicas=args.replicas,
+            max_batch=args.max_batch,
+            sampled_budget=(args.sampled_budget
+                            if 0 < args.sampled_budget < 1 else None))
+        n_batches, query_s = run_queries(
+            lambda ids: frontend.query(ids).logits)
+        if args.update_edges > 0:
+            for e in random_edge_updates(graph, args.update_edges, rng):
+                seq = frontend.update_edges(add=[e], wait=True)
+                updates.append({"seq": seq,
+                                "min_applied": frontend.min_applied_seq()})
+        n_parts = frontend.replicas[0].si.n_partitions
+        build_s = frontend.replicas[0].build_seconds
+        serve_stats = frontend.stats()
+        frontend.close()
 
     out = {
         "dataset": args.dataset, "model": args.model,
-        "n_nodes": server.n_nodes,
-        "n_partitions": server.si.n_partitions,
-        "cache_build_s": round(server.build_seconds, 4),
+        "n_nodes": graph.n,
+        "replicas": max(args.replicas, 0),
+        "n_partitions": n_parts,
+        "cache_build_s": round(build_s, 4),
         "queries": int(args.queries),
         "query_batches": n_batches,
         "queries_per_s": round(args.queries / max(query_s, 1e-9), 1),
         "updates": updates,
-        "serve_stats": server.stats(),
+        "serve_stats": serve_stats,
     }
     snap = obs.finalize_from_args(args)
     if snap is not None:

@@ -146,12 +146,14 @@ def test_serve_histograms_and_guarded_clock(graph):
     srv.query(np.arange(10))
     st = srv.update_edges(add=[(0, 5)])
     reg = obs.get_registry()
-    assert reg.get_histogram("serve.query_ms")["count"] == 2
-    assert reg.get_counter("serve.queries") == 13.0
-    assert reg.get_counter("serve.updates") == 1.0
-    assert reg.get_counter("serve.dirty_nodes") == st["dirty_nodes"]
-    assert reg.get_histogram("serve.update_ms")["count"] == 1
-    assert reg.get_gauge("serve.build_seconds") >= 0.0
+    # serving metrics are labelled per replica since the frontend fan-out
+    assert reg.get_histogram("serve.query_ms", replica="r0")["count"] == 2
+    assert reg.get_counter("serve.queries", replica="r0") == 13.0
+    assert reg.get_counter("serve.updates", replica="r0") == 1.0
+    assert reg.get_counter("serve.dirty_nodes",
+                           replica="r0") == st["dirty_nodes"]
+    assert reg.get_histogram("serve.update_ms", replica="r0")["count"] == 1
+    assert reg.get_gauge("serve.build_seconds", replica="r0") >= 0.0
     assert srv.stats()["clock_anomalies"] == 0
 
 

@@ -1,0 +1,372 @@
+"""Concurrent serving tier: incremental re-tiling vs the full re-tile
+oracle, ``update_operand`` forward equivalence, snapshot versioning and
+refcounting, non-blocking queries during in-flight updates, replica
+consistency behind the frontend, and sampled SLO routing."""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.graphs.synthetic import sbm_graph
+from repro.infer import (NodeServer, ServeFrontend, StreamConfig,
+                         StreamingInference, UpdateLog)
+from repro.infer.serve import _edit_csr, _neighbors
+from repro.models.gnn import MODELS
+from repro.sparse.bcoo import csr_to_bcoo_host, host_row_ptr, retile_rows
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return sbm_graph(n_nodes=500, n_clusters=5, avg_degree=10, feat_dim=16,
+                     seed=0)
+
+
+@pytest.fixture(scope="module")
+def params(graph):
+    return MODELS["gcn"].init(jax.random.PRNGKey(0),
+                              graph.features.shape[1], 32,
+                              graph.num_classes, 2, False)
+
+
+CFG = StreamConfig(block=32, n_partitions=3, memory_budget_mb=None)
+
+
+def _assert_bcoo_identical(a, b):
+    assert (a.bm, a.bk, a.n_rows, a.n_cols) == (b.bm, b.bk,
+                                                b.n_rows, b.n_cols)
+    assert np.array_equal(a.row_ids, b.row_ids)
+    assert np.array_equal(a.col_ids, b.col_ids)
+    assert np.array_equal(a.blocks, b.blocks)
+    assert np.array_equal(host_row_ptr(a.row_ids, a.n_row_blocks),
+                          host_row_ptr(b.row_ids, b.n_row_blocks))
+    assert not a.blocks[-1].any()          # zero sentinel intact
+
+
+def _assert_meta_matches(m, oracle):
+    assert np.array_equal(m.col_nnz, oracle.col_nnz)
+    assert np.array_equal(m.col_block_tiles, oracle.col_block_tiles)
+    np.testing.assert_allclose(m.col_norm, oracle.col_norm,
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(m.col_block_norm, oracle.col_block_norm,
+                               rtol=1e-5, atol=1e-5)
+
+
+def _dirty_rows(add, remove):
+    pairs = np.asarray(list(add) + list(remove),
+                       dtype=np.int64).reshape(-1, 2)
+    return np.unique(pairs)
+
+
+# -------------------------- incremental re-tile ----------------------------
+
+def _hub_and_leaf(adj):
+    """(high-degree node, one of its neighbors, an isolated-ish node)."""
+    deg = adj.row_nnz()
+    hub = int(np.argmax(deg))
+    leaf = int(np.argmin(deg))
+    nbr = int(adj.col[adj.rowptr[hub]])
+    return hub, nbr, leaf
+
+
+@pytest.mark.parametrize("kind", ["remove", "add", "mixed", "duplicate"])
+def test_retile_rows_matches_full_retile(graph, kind):
+    """Acceptance: ``retile_rows`` over the dirty row blocks produces host
+    arrays BIT-IDENTICAL to a full ``csr_to_bcoo_host`` rebuild of the
+    edited CSR — including edits that change a row block's tile count —
+    with exact ``col_nnz``/``col_block_tiles`` and norms to float order."""
+    adj = graph.adj
+    hub, nbr, leaf = _hub_and_leaf(adj)
+    far = (leaf + graph.n // 2) % graph.n
+    edits = {
+        "remove": ([], [(hub, nbr)]),
+        # hub→far reaches across column blocks: makes tiles appear
+        "add": ([(hub, far), (leaf, far)], []),
+        "mixed": ([(leaf, far)], [(hub, nbr)]),
+        # re-adding an existing edge is a no-op at the CSR level
+        "duplicate": ([(hub, nbr)], []),
+    }[kind]
+    add, remove = edits
+    host, meta = csr_to_bcoo_host(adj, bm=32, bk=32)
+    new_csr = _edit_csr(adj,
+                        np.asarray(add, np.int64).reshape(-1, 2),
+                        np.asarray(remove, np.int64).reshape(-1, 2))
+    if kind == "duplicate":
+        assert new_csr.nnz == adj.nnz
+    host2, meta2 = retile_rows(host, meta, new_csr,
+                               _dirty_rows(add, remove), in_place=False)
+    oracle_host, oracle_meta = csr_to_bcoo_host(new_csr, bm=32, bk=32)
+    _assert_bcoo_identical(host2, oracle_host)
+    _assert_meta_matches(meta2, oracle_meta)
+
+
+def test_retile_rows_tile_count_change_splices():
+    """An edit that creates brand-new tiles must take the splice path
+    (s_total grows) and still match the oracle. Needs a graph that is
+    sparse at TILE granularity, hence bigger than the module fixture."""
+    g = sbm_graph(n_nodes=2000, n_clusters=8, avg_degree=3, feat_dim=8,
+                  seed=1)
+    adj = g.adj
+    hub = int(np.argmax(adj.row_nnz()))
+    host, meta = csr_to_bcoo_host(adj, bm=32, bk=32)
+    s_before = host.row_ids.shape[0]
+    # wire hub into a column block its row block provably doesn't touch
+    present = set(host.col_ids[host.row_ids == hub // 32].tolist())
+    missing = next(cb for cb in range(g.n // 32) if cb not in present)
+    add = [(hub, missing * 32)]
+    new_csr = _edit_csr(adj, np.asarray(add, np.int64),
+                        np.empty((0, 2), np.int64))
+    host2, meta2 = retile_rows(host, meta, new_csr, _dirty_rows(add, []))
+    assert host2.row_ids.shape[0] > s_before
+    oracle_host, oracle_meta = csr_to_bcoo_host(new_csr, bm=32, bk=32)
+    _assert_bcoo_identical(host2, oracle_host)
+    _assert_meta_matches(meta2, oracle_meta)
+
+
+def test_retile_rows_sequential_edits(graph):
+    """retile_rows composes: a chain of add/remove edits applied
+    incrementally ends bit-identical to one full rebuild of the final CSR."""
+    adj = graph.adj
+    hub, nbr, leaf = _hub_and_leaf(adj)
+    host, meta = csr_to_bcoo_host(adj, bm=32, bk=32)
+    csr = adj
+    chain = [([], [(hub, nbr)]),
+             ([(leaf, (leaf + 97) % graph.n)], []),
+             ([(hub, nbr)], [(leaf, (leaf + 97) % graph.n)])]
+    for add, remove in chain:
+        csr = _edit_csr(csr, np.asarray(add, np.int64).reshape(-1, 2),
+                        np.asarray(remove, np.int64).reshape(-1, 2))
+        host, meta = retile_rows(host, meta, csr, _dirty_rows(add, remove))
+    oracle_host, oracle_meta = csr_to_bcoo_host(csr, bm=32, bk=32)
+    _assert_bcoo_identical(host, oracle_host)
+    _assert_meta_matches(meta, oracle_meta)
+
+
+# ------------------------ update_operand equivalence -----------------------
+
+def _local_edit(si, add, remove):
+    """Apply original-id edits to si's LOCAL adjacency; returns
+    (new_local_adj, operand-dirty local rows)."""
+    add = np.asarray([[si.pos[u], si.pos[v]] for u, v in add],
+                     np.int64).reshape(-1, 2)
+    remove = np.asarray([[si.pos[u], si.pos[v]] for u, v in remove],
+                        np.int64).reshape(-1, 2)
+    new_adj = _edit_csr(si.adj, add, remove)
+    seeds = np.unique(np.concatenate([add.ravel(), remove.ravel()])
+                      ).astype(np.int64)
+    dirty = np.union1d(seeds, np.union1d(_neighbors(si.adj, seeds),
+                                         _neighbors(new_adj, seeds)))
+    return new_adj, dirty
+
+
+def test_update_operand_forward_bit_identical(graph, params):
+    """Incremental operand update + partial partition rebuild must be
+    bit-identical to ``rebuild_operand`` (full re-tile, full partition
+    rebuild) under the SAME node permutation."""
+    si = StreamingInference(graph, "gcn", params, CFG)
+    hub = int(np.argmax(graph.adj.row_nnz()))
+    nbr_orig = int(graph.adj.col[graph.adj.rowptr[hub]])
+    new_adj, dirty = _local_edit(si, [], [(hub, nbr_orig)])
+    st = si.update_operand(new_adj, dirty)
+    assert not st["fallback"]
+    assert 0 < st["partitions_rebuilt"] <= si.n_partitions
+    out = np.asarray(si.forward())
+
+    oracle = StreamingInference(graph, "gcn", params, CFG)
+    oracle.rebuild_operand(new_adj)
+    assert np.array_equal(out, np.asarray(oracle.forward()))
+
+
+def test_update_operand_fallback_stays_correct(graph, params):
+    """When an edit overflows the compiled pads (hub wired to every 4th
+    node blows the gather budget), update_operand must fall back to a full
+    partition rebuild and still match the full-rebuild oracle."""
+    si = StreamingInference(graph, "gcn", params, CFG)
+    hub = int(np.argmax(graph.adj.row_nnz()))
+    add = [(hub, v) for v in range(0, graph.n, 4) if v != hub]
+    new_adj, dirty = _local_edit(si, add, [])
+    st = si.update_operand(new_adj, dirty)
+    out = np.asarray(si.forward())
+
+    oracle = StreamingInference(graph, "gcn", params, CFG)
+    oracle.rebuild_operand(new_adj)
+    ref = np.asarray(oracle.forward())
+    if st["fallback"]:
+        np.testing.assert_allclose(out[: graph.n], ref[: graph.n],
+                                   rtol=1e-5, atol=1e-5)
+    else:   # fit the pads after all — then bit-identity is required
+        assert np.array_equal(out, ref)
+
+
+# ------------------------- snapshot versioning -----------------------------
+
+def test_snapshot_versions_refcounted(graph, params):
+    srv = NodeServer(graph, "gcn", params, CFG)
+    ids = np.arange(graph.n)
+    pre = srv.query(ids)
+    old = srv.acquire_snapshot()
+    assert old.version == 0
+
+    hub = int(np.argmax(graph.adj.row_nnz()))
+    nbr = int(graph.adj.col[graph.adj.rowptr[hub]])
+    st = srv.update_edges(remove=[(hub, nbr)])
+    assert st["version"] == 1 and srv._snap.version == 1
+    # the pinned old version survives publication and still answers
+    assert old in srv._retired
+    assert np.array_equal(
+        old.logits[srv.si.pos[ids]].copy(), pre)
+    post = srv.query(ids)
+    assert not np.array_equal(post, pre)
+    srv.release_snapshot(old)
+    assert not srv._retired and srv.versions_dropped == 1
+
+    # post-publish answers == a fresh single-threaded server's answers
+    fresh = NodeServer(graph, "gcn", params, CFG)
+    fresh.update_edges(remove=[(hub, nbr)])
+    assert np.array_equal(post, fresh.query(ids))
+
+
+def test_queries_never_block_on_updates(graph, params):
+    """A query issued while an update is mid-recompute must return
+    immediately with the COMPLETE previous snapshot (never a torn one)."""
+    srv = NodeServer(graph, "gcn", params, CFG)
+    ids = np.arange(graph.n)
+    pre = srv.query(ids)
+    hub = int(np.argmax(graph.adj.row_nnz()))
+    nbr = int(graph.adj.col[graph.adj.rowptr[hub]])
+
+    entered, release = threading.Event(), threading.Event()
+    orig = srv.si.recompute_rows
+
+    def blocking(*a, **k):
+        entered.set()
+        assert release.wait(30)
+        return orig(*a, **k)
+
+    srv.si.recompute_rows = blocking
+    err = []
+
+    def do_update():
+        try:
+            srv.update_edges(remove=[(hub, nbr)])
+        except BaseException as e:   # pragma: no cover
+            err.append(e)
+            release.set()
+
+    t = threading.Thread(target=do_update)
+    t.start()
+    try:
+        assert entered.wait(30)
+        for _ in range(3):          # reads while the rebuild is stuck
+            t0 = time.perf_counter()
+            mid = srv.query(ids)
+            assert time.perf_counter() - t0 < 2.0
+            assert np.array_equal(mid, pre)   # complete OLD snapshot
+        assert srv._snap.version == 0         # nothing published yet
+    finally:
+        release.set()
+        t.join(60)
+    assert not err and srv._snap.version == 1
+    post = srv.query(ids)
+    fresh = NodeServer(graph, "gcn", params, CFG)
+    fresh.update_edges(remove=[(hub, nbr)])
+    assert np.array_equal(post, fresh.query(ids))
+
+
+# ------------------------------ frontend -----------------------------------
+
+def test_update_log_sequencing():
+    log = UpdateLog()
+    assert log.latest_seq == 0 and log.since(0) == []
+    s1 = log.append([(0, 1)], [])
+    s2 = log.append([], [(2, 3)])
+    assert (s1, s2) == (1, 2) and log.latest_seq == 2
+    tail = log.since(1)
+    assert len(tail) == 1 and tail[0][0] == 2
+    assert np.array_equal(tail[0][2], [[2, 3]])
+
+
+def test_frontend_replicas_consistent(graph, params):
+    """Batched frontend answers == bare server answers; updates through the
+    write-ahead log reach every replica; post-update answers bitwise match
+    a fresh single-threaded server that applied the same sequence."""
+    hub = int(np.argmax(graph.adj.row_nnz()))
+    nbr = int(graph.adj.col[graph.adj.rowptr[hub]])
+    ids = np.arange(graph.n)
+    with ServeFrontend(graph, "gcn", params, CFG, replicas=2,
+                       max_batch=128) as fe:
+        bare = NodeServer(graph, "gcn", params, CFG)
+        reqs = [fe.submit(ids[i::3]) for i in range(3)]
+        for i, r in enumerate(reqs):
+            res = r.wait(30)
+            assert res.staleness == 0 and not res.sampled
+            assert np.array_equal(res.logits, bare.query(ids[i::3]))
+
+        seq = fe.update_edges(remove=[(hub, nbr)], wait=True)
+        assert seq == 1 and fe.min_applied_seq() == 1
+        res = fe.query(ids)
+        assert res.applied_seq == 1 and res.staleness == 0
+        bare.update_edges(remove=[(hub, nbr)])
+        assert np.array_equal(res.logits, bare.query(ids))
+        st = fe.stats()
+        assert st["log_seq"] == 1
+        assert all(s["applied_seq"] == 1 for s in st["servers"])
+
+
+def test_frontend_serves_during_replica_rebuild(graph, params):
+    """While one replica is stuck mid-rebuild the dispatcher routes around
+    it: queries answer immediately from another replica's snapshot with an
+    honest staleness count."""
+    hub = int(np.argmax(graph.adj.row_nnz()))
+    nbr = int(graph.adj.col[graph.adj.rowptr[hub]])
+    ids = np.arange(0, graph.n, 7)
+    with ServeFrontend(graph, "gcn", params, CFG, replicas=2,
+                       max_batch=64) as fe:
+        pre = fe.query(ids).logits
+        # stall r0's recompute; r1 keeps serving version 0
+        entered, release = threading.Event(), threading.Event()
+        r0 = fe.replicas[0]
+        orig = r0.si.recompute_rows
+
+        def blocking(*a, **k):
+            entered.set()
+            assert release.wait(30)
+            return orig(*a, **k)
+
+        r0.si.recompute_rows = blocking
+        try:
+            seq = fe.update_edges(remove=[(hub, nbr)])
+            assert entered.wait(30)
+            for _ in range(3):
+                t0 = time.perf_counter()
+                res = fe.query(ids, timeout=10.0)
+                assert time.perf_counter() - t0 < 2.0
+                assert res.replica != "r0"      # locked replica skipped
+                assert res.staleness == seq     # lag reported honestly
+                assert np.array_equal(res.logits, pre)
+        finally:
+            release.set()
+        fe.wait_applied(seq, timeout=60.0)
+        res = fe.query(ids)
+        assert res.staleness == 0
+        fresh = NodeServer(graph, "gcn", params, CFG)
+        fresh.update_edges(remove=[(hub, nbr)])
+        assert np.array_equal(res.logits, fresh.query(ids))
+
+
+def test_frontend_sampled_routing(graph, params):
+    """error_budget routes to the sampled replica iff the budget covers the
+    measured relative error; responses are labelled with the trade taken."""
+    ids = np.arange(0, graph.n, 5)
+    with ServeFrontend(graph, "gcn", params, CFG, replicas=1,
+                       sampled_budget=0.7) as fe:
+        assert 0.0 < fe.sampled_rel_error < float("inf")
+        exact = fe.query(ids, error_budget=fe.sampled_rel_error * 0.5)
+        assert not exact.sampled and exact.replica == "r0"
+        loose = fe.query(ids, error_budget=fe.sampled_rel_error * 2.0)
+        assert loose.sampled and loose.replica == "sampled"
+        assert not np.array_equal(loose.logits, exact.logits)
+        none = fe.query(ids)                   # no budget → exact
+        assert not none.sampled
+        assert np.array_equal(none.logits, exact.logits)
