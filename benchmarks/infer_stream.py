@@ -171,6 +171,7 @@ def main():
 
     report = {
         "schema": SCHEMA,
+        "tiny": bool(args.tiny),    # size class for trajectory baselines
         "dataset": args.dataset,
         "nodes": g.n,
         "edges": g.adj.nnz,

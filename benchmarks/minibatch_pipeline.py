@@ -143,6 +143,7 @@ def main() -> None:
     pool = make_pool(args.buckets)
     report = {
         "schema": SCHEMA,
+        "tiny": bool(args.tiny),    # size class for trajectory baselines
         "dataset": args.dataset,
         "nodes": g.n,
         "edges": g.adj.nnz,

@@ -1,12 +1,28 @@
 """Observability overhead proof: instrumented vs bare minibatch training.
 
 Runs the SAME tiny minibatch-RSC workload with telemetry fully off and
-fully on (metrics registry + tracer), interleaved A/B/A/B so drift hits
-both arms equally, and compares median steady-state step times (compile
-steps excluded, same rule as ``benchmarks.minibatch_pipeline``). The
-claim under test: every instrumentation site costs one attribute check
-when disabled and a few dict writes when enabled, so the enabled-mode
-overhead on the minibatch path stays **under 2%**.
+fully on (metrics registry + tracer + approximation ledger + epoch-end
+error probes) and compares steady-state step times (compile steps
+excluded, same rule as ``benchmarks.minibatch_pipeline``). The claim
+under test: every instrumentation site costs one attribute check when
+disabled and a few dict writes when enabled (``ledger.note_step`` is
+~8 µs against multi-ms steps) — and the probe/export additions run off
+the step's critical path — so the enabled-mode overhead on the
+minibatch path stays **under 2%**.
+
+Measuring a 2% delta on a shared box needs a drift-robust estimator;
+whole-run medians wander ±10% here as the container moves through
+multi-second contention phases. Two defenses:
+
+* **Low-quantile step time (p10)** per run instead of the median —
+  external contention only ever ADDS time, so the low quantile tracks
+  the uncontended speed both arms share.
+* **A-B-A sandwich**: runs alternate off/on/off/on/.../off, and each
+  instrumented run is scored against the GEOMETRIC MEAN of its two
+  neighboring bare runs — linear drift across the sandwich cancels
+  exactly, phase noise is halved. ``overhead_frac`` is the median of
+  the per-sandwich ratios (minus 1); the per-pair values ship in the
+  report so a noisy outlier pair is visible.
 
 Report schema ``rsc/bench_obs/v1`` (written to ``--out``, default
 repo-root ``BENCH_obs.json`` — schema- and threshold-checked in CI):
@@ -74,31 +90,45 @@ def main() -> None:
                    block=args.block),
         mean_agg=MODELS["gcn"].uses_mean_agg())
 
+    last_ledger = {}
+
     def run(instrumented: bool) -> "np.ndarray":
-        obs.reset(metrics=instrumented, trace=instrumented)
+        obs.reset(metrics=instrumented, trace=instrumented,
+                  ledger=instrumented)
         cfg = MinibatchConfig(
             model="gcn", n_layers=args.layers, hidden=args.hidden,
             block=args.block, epochs=args.epochs, rsc=True,
             budget=args.budget, n_subgraphs=args.subgraphs, n_buckets=1)
         tr = MinibatchTrainer(cfg, pool=pool)
         res = tr.train(eval_every=max(args.epochs, 1))
+        if instrumented and res.get("ledger"):
+            last_ledger.update(res["ledger"])
         return _steady_times(pool, res)
 
-    # Interleaved A/B/A/B: slow drift (thermal, background load) cancels
-    # instead of landing entirely on one arm.
-    off, on = [], []
-    for r in range(args.repeats):
-        off.append(run(False))
-        on.append(run(True))
-        print(f"[bench] pair {r + 1}/{args.repeats} done", file=sys.stderr)
+    def p10(times: "np.ndarray") -> float:
+        return float(np.percentile(times, 10)) * 1e3
 
-    snap = obs.get_registry().snapshot()          # last instrumented run
-    n_events = len(obs.get_tracer().snapshot())
+    # A-B-A sandwich (see module docstring): off/on/off/on/.../off, each
+    # on-run scored against the geometric mean of its two bare neighbors.
+    off = [run(False)]
+    on, snap, n_events = [], None, 0
+    for r in range(args.repeats):
+        on.append(run(True))
+        if snap is None:                 # capture ONE instrumented run
+            snap = obs.get_registry().snapshot()
+            n_events = len(obs.get_tracer().snapshot())
+        off.append(run(False))
+        print(f"[bench] sandwich {r + 1}/{args.repeats} done",
+              file=sys.stderr)
     obs.reset()
 
-    off_ms = float(np.median(np.concatenate(off))) * 1e3
-    on_ms = float(np.median(np.concatenate(on))) * 1e3
-    overhead = on_ms / max(off_ms, 1e-9) - 1.0
+    pair_fracs = [
+        p10(on[r]) / max((p10(off[r]) * p10(off[r + 1])) ** 0.5, 1e-9) - 1.0
+        for r in range(args.repeats)
+    ]
+    off_ms = p10(np.concatenate(off))
+    on_ms = p10(np.concatenate(on))
+    overhead = float(np.median(pair_fracs))
 
     report = {
         "schema": SCHEMA,
@@ -106,17 +136,31 @@ def main() -> None:
         "nodes": g.n,
         "tiny": bool(args.tiny),
         "repeats": args.repeats,
-        "steady_steps_per_arm": int(sum(a.size for a in off)),
+        "estimator": "median of per-sandwich p10 ratios (A-B-A)",
+        "steady_steps_per_arm": int(sum(a.size for a in on)),
         "step_ms_off": round(off_ms, 4),
         "step_ms_on": round(on_ms, 4),
+        "pair_fracs": [round(f, 4) for f in pair_fracs],
         "overhead_frac": round(overhead, 4),
         "threshold": THRESHOLD,
-        "pass": bool(overhead < THRESHOLD),
+        # Tiny runs are too noisy for the threshold (documented above):
+        # pass is None so the trajectory gate never compares a noise
+        # flip against the committed full-size verdict.
+        "pass": (None if args.tiny else bool(overhead < THRESHOLD)),
         "instruments_on": {
             "counters": len(snap["counters"]),
             "gauges": len(snap["gauges"]),
             "histograms": len(snap["histograms"]),
             "trace_events_per_run": n_events,
+        },
+        # Proof the instrumented arm really carried the full ledger +
+        # probe load (not just counters): epochs accounted, allocator
+        # runs audited, per-layer error probes taken.
+        "ledger_on": {
+            "epochs": int(last_ledger.get("epochs", 0)),
+            "allocations": int(last_ledger.get("allocations", 0)),
+            "violations": int(last_ledger.get("violations", 0)),
+            "probed_layers": sorted((last_ledger.get("probes") or {})),
         },
     }
     out_path = Path(args.out)

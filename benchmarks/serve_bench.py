@@ -218,6 +218,7 @@ def main():
 
     report = {
         "schema": SCHEMA,
+        "tiny": bool(args.tiny),    # size class for trajectory baselines
         "dataset": args.dataset,
         "scale": args.scale,
         "nodes": g.n,

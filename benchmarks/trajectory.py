@@ -1,0 +1,277 @@
+"""Bench-trajectory regression gate: fresh BENCH_*.json vs committed.
+
+Every benchmark in this repo writes a schema-tagged JSON report
+(``rsc/bench_spmm/v2``, ``rsc/bench_minibatch/v1``, …) and commits a
+full-size copy at the repo root. This tool compares a FRESH set of those
+reports against the committed baselines and fails (``--gate``) when a
+metric regressed beyond its noise band — catching "the optimization PR
+that quietly un-optimized the previous PR" across commits.
+
+What gets compared (everything else is informational):
+
+* **Booleans** (``pass`` flags) — always compared; a True→False flip is
+  a regression regardless of machine or workload size.
+* **Ratios** — dimensionless metrics (``speedup*``, ``*hit_rate``,
+  ``overhead_frac``, ``rel_error``) — compared only when fresh and
+  baseline ran the same size class (``tiny`` flag matches), inside a
+  wide multiplicative noise band (default ±40%): ratios are stable
+  across machines but not across workload sizes.
+* **Timings** (``*_ms``, ``us_per_call``, ``qps``, ``seconds*``) —
+  machine-bound; compared only under ``--trust-timings`` (same-machine
+  trajectories, e.g. a dedicated perf runner), band ±50%.
+
+Baselines come from the committed repo-root ``BENCH_*.json`` AND from the
+``observations`` block of a committed ``BENCH_trajectory.json`` (this
+tool's own output), so a paper-table machine that commits its trajectory
+report seeds future same-size comparisons. ``--inject name:metric=value``
+overrides a fresh metric and forces its comparison — CI uses it to prove
+the gate actually fails on a synthetic regression.
+
+Report schema ``rsc/bench_trajectory/v1``:
+
+    PYTHONPATH=src python -m benchmarks.trajectory \
+        --fresh BENCH_obs.json BENCH_spmm.json --gate \
+        [--out BENCH_trajectory.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+SCHEMA = "rsc/bench_trajectory/v1"
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+# Metric classification by flattened-key substring. Order matters: the
+# first match wins, so "overhead_frac" classifies as ratio before the
+# generic fraction skip. direction: +1 = higher is better, -1 = lower.
+_RULES: list[tuple[tuple[str, ...], str, int]] = [
+    (("pass",), "bool", +1),
+    (("speedup",), "ratio", +1),
+    (("hit_rate",), "ratio", +1),
+    (("overhead_frac",), "ratio", -1),
+    (("rel_error", "test_delta"), "ratio", -1),
+    (("qps", "per_s", "partitions_per_s"), "timing", +1),
+    (("_ms", "us_per_call", "seconds", "wall_s", "_us"), "timing", -1),
+]
+
+
+def classify(key: str) -> tuple[str, int] | None:
+    leaf = key.rsplit(".", 1)[-1]
+    for needles, kind, direction in _RULES:
+        if any(n in leaf for n in needles):
+            return kind, direction
+    return None
+
+
+def flatten(node, prefix: str = "") -> dict[str, object]:
+    """Flatten a report to {dotted.path: leaf} for classified leaves."""
+    out: dict[str, object] = {}
+    if isinstance(node, dict):
+        for k, v in node.items():
+            out.update(flatten(v, f"{prefix}.{k}" if prefix else str(k)))
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            out.update(flatten(v, f"{prefix}.{i}"))
+    elif isinstance(node, bool):
+        if classify(prefix):
+            out[prefix] = node
+    elif isinstance(node, (int, float)):
+        c = classify(prefix)
+        # The "pass" rule only applies to actual booleans — a float like
+        # seconds_per_pass that happens to contain the substring falls
+        # through (it would have been a timing anyway).
+        if c and c[0] != "bool":
+            out[prefix] = float(node)
+    return out
+
+
+def bench_name(report: dict, path: Path) -> str:
+    schema = report.get("schema", "")
+    parts = schema.split("/")
+    return parts[1] if len(parts) == 3 else path.stem.lower()
+
+
+def load_report(path: Path) -> tuple[str, dict]:
+    report = json.loads(path.read_text())
+    return bench_name(report, path), report
+
+
+def compare_one(key: str, fresh, base, *, size_match: bool, forced: bool,
+                trust_timings: bool, band_ratio: float,
+                band_timing: float) -> dict | None:
+    """One metric comparison record, or None when not comparable."""
+    kind, direction = classify(key)
+    if isinstance(fresh, bool) or isinstance(base, bool) or kind == "bool":
+        regressed = bool(base) and not bool(fresh)
+        return {"metric": key, "kind": "bool", "fresh": bool(fresh),
+                "baseline": bool(base), "regressed": regressed}
+    if kind == "ratio" and not (size_match or forced):
+        return None
+    if kind == "timing" and not (trust_timings or forced):
+        return None
+    band = band_ratio if kind == "ratio" else band_timing
+    base = float(base)
+    fresh = float(fresh)
+    # Multiplicative band around the baseline, sign-safe: metrics that
+    # straddle zero (overhead_frac) get an absolute floor of the band
+    # itself so a -0.001 → +0.01 wiggle never trips.
+    tol = max(abs(base) * band, band * 0.1)
+    if direction > 0:
+        regressed = fresh < base - tol
+    else:
+        regressed = fresh > base + tol
+    return {"metric": key, "kind": kind, "fresh": round(fresh, 6),
+            "baseline": round(base, 6), "band": band,
+            "direction": "higher_better" if direction > 0
+            else "lower_better", "regressed": bool(regressed)}
+
+
+def parse_args():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", nargs="+", required=True, metavar="JSON",
+                    help="fresh benchmark reports to check")
+    ap.add_argument("--baseline-dir", default=str(REPO_ROOT),
+                    help="directory holding committed BENCH_*.json")
+    ap.add_argument("--baseline-trajectory", default=None, metavar="JSON",
+                    help="committed BENCH_trajectory.json whose "
+                         "observations seed same-size baselines (default: "
+                         "<baseline-dir>/BENCH_trajectory.json if present)")
+    ap.add_argument("--out", default=str(REPO_ROOT / "BENCH_trajectory.json"))
+    ap.add_argument("--gate", action="store_true",
+                    help="exit 1 when any compared metric regressed")
+    ap.add_argument("--trust-timings", action="store_true",
+                    help="also compare machine-bound timing metrics "
+                         "(same-machine trajectories only)")
+    ap.add_argument("--band", type=float, default=0.4,
+                    help="ratio-metric noise band (fraction of baseline)")
+    ap.add_argument("--band-timing", type=float, default=0.5)
+    ap.add_argument("--inject", action="append", default=[],
+                    metavar="BENCH:METRIC=VALUE",
+                    help="override a fresh metric and force its "
+                         "comparison (synthetic-regression self-test)")
+    return ap.parse_args()
+
+
+def _parse_inject(spec: str) -> tuple[str, str, object]:
+    head, _, val = spec.partition("=")
+    bench, _, metric = head.partition(":")
+    if not (bench and metric and val):
+        raise SystemExit(f"--inject wants BENCH:METRIC=VALUE, got {spec!r}")
+    if val.lower() in ("true", "false"):
+        return bench, metric, val.lower() == "true"
+    return bench, metric, float(val)
+
+
+def main() -> None:
+    args = parse_args()
+
+    fresh: dict[str, dict] = {}
+    for p in args.fresh:
+        name, report = load_report(Path(p))
+        fresh[name] = report
+
+    baselines: dict[str, list[tuple[str, bool, dict]]] = {}
+
+    def add_baseline(name: str, src: str, report_tiny: bool,
+                     metrics: dict) -> None:
+        baselines.setdefault(name, []).append((src, report_tiny, metrics))
+
+    for p in sorted(Path(args.baseline_dir).glob("BENCH_*.json")):
+        if p.name == "BENCH_trajectory.json":
+            continue
+        try:
+            name, report = load_report(p)
+        except (json.JSONDecodeError, OSError):
+            continue
+        add_baseline(name, f"committed:{p.name}",
+                     bool(report.get("tiny", False)), flatten(report))
+    traj_path = (Path(args.baseline_trajectory) if args.baseline_trajectory
+                 else Path(args.baseline_dir) / "BENCH_trajectory.json")
+    if traj_path.exists():
+        prior = json.loads(traj_path.read_text())
+        for name, ob in (prior.get("observations") or {}).items():
+            add_baseline(name, f"trajectory:{traj_path.name}",
+                         bool(ob.get("tiny", False)),
+                         dict(ob.get("metrics") or {}))
+
+    forced: dict[str, dict[str, object]] = {}
+    for spec in args.inject:
+        bench, metric, value = _parse_inject(spec)
+        forced.setdefault(bench, {})[metric] = value
+
+    benches: dict[str, dict] = {}
+    observations: dict[str, dict] = {}
+    n_compared = n_regressed = 0
+    for name, report in sorted(fresh.items()):
+        metrics = flatten(report)
+        tiny = bool(report.get("tiny", False))
+        forced_keys = set()
+        for metric, value in forced.get(name, {}).items():
+            metrics[metric] = value
+            forced_keys.add(metric)
+        observations[name] = {"tiny": tiny, "metrics": metrics}
+        comparisons: list[dict] = []
+        skipped = 0
+        for key, val in sorted(metrics.items()):
+            # Prefer a same-size-class baseline; else fall back to any
+            # (bools still compare, size-bound ratios then skip).
+            cands = [b for b in baselines.get(name, ())
+                     if key in b[2]]
+            if not cands:
+                skipped += 1
+                continue
+            same = [b for b in cands if b[1] == tiny]
+            src, b_tiny, b_metrics = (same or cands)[0]
+            rec = compare_one(
+                key, val, b_metrics[key],
+                size_match=(b_tiny == tiny),
+                forced=(key in forced_keys),
+                trust_timings=args.trust_timings,
+                band_ratio=args.band, band_timing=args.band_timing)
+            if rec is None:
+                skipped += 1
+                continue
+            rec["baseline_src"] = src
+            if key in forced_keys:
+                rec["injected"] = True
+            comparisons.append(rec)
+        regs = [c for c in comparisons if c["regressed"]]
+        n_compared += len(comparisons)
+        n_regressed += len(regs)
+        benches[name] = {
+            "tiny": tiny,
+            "compared": len(comparisons),
+            "skipped": skipped,
+            "regressions": regs,
+            "comparisons": comparisons,
+        }
+        for c in regs:
+            print(f"[trajectory] REGRESSION {name}.{c['metric']}: "
+                  f"{c['baseline']} -> {c['fresh']} "
+                  f"(vs {c['baseline_src']})", file=sys.stderr)
+
+    report = {
+        "schema": SCHEMA,
+        "band_ratio": args.band,
+        "band_timing": args.band_timing,
+        "trust_timings": bool(args.trust_timings),
+        "injected": sorted(args.inject),
+        "n_compared": n_compared,
+        "n_regressed": n_regressed,
+        "regressed": bool(n_regressed),
+        "benches": benches,
+        "observations": observations,
+    }
+    out = Path(args.out)
+    out.write_text(json.dumps(report, indent=1) + "\n")
+    print(json.dumps({k: report[k] for k in
+                      ("schema", "n_compared", "n_regressed", "regressed")}))
+    print(f"[trajectory] wrote {out}", file=sys.stderr)
+    if args.gate and report["regressed"]:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -36,6 +36,9 @@ class Allocation:
     cost: float              # achieved Σ tiles·d
     budget: float            # C · Σ full tiles·d
     error: float             # Eq. 4a objective value (sum of dropped mass)
+    # Per-layer achieved cost (tiles·d), summing to ``cost`` — the
+    # approximation ledger's allocated-resources breakdown.
+    layer_cost: np.ndarray | None = None
 
 
 def _layer_order(spec: LayerSpec) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -91,21 +94,22 @@ def greedy_allocate(
         error += best_inc
         dropped[best] = best_new
 
-    keep, k = [], []
+    keep, k, lcost = [], [], []
     for l in range(L):
         mask = np.ones(n_cb[l], dtype=bool)
         mask[orders[l][: dropped[l]]] = False
         keep.append(mask)
         k.append(n_cb[l] - dropped[l])
+        lcost.append(pc[l][-1] - pc[l][dropped[l]])
     return Allocation(keep=keep, k=np.asarray(k), cost=cost, budget=budget,
-                      error=error)
+                      error=error, layer_cost=np.asarray(lcost))
 
 
 def uniform_allocate(layers: list[LayerSpec], budget_frac: float) -> Allocation:
     """Paper's Fig. 6 baseline: k_l = C · n_col_blocks for every layer,
     keeping the top-scored blocks (note: cost is NOT guaranteed ≤ budget —
     that is exactly the deficiency RSC's allocator fixes)."""
-    keep, k, cost = [], [], 0.0
+    keep, k, cost, lcost = [], [], 0.0, []
     for sp in layers:
         n = sp.scores.shape[0]
         kk = max(1, int(round(budget_frac * n)))
@@ -114,12 +118,15 @@ def uniform_allocate(layers: list[LayerSpec], budget_frac: float) -> Allocation:
         mask[idx] = True
         keep.append(mask)
         k.append(kk)
-        cost += float(np.sum(sp.tiles[mask])) * sp.d
+        lc = float(np.sum(sp.tiles[mask])) * sp.d
+        lcost.append(lc)
+        cost += lc
     total_full = sum(float(np.sum(sp.tiles)) * sp.d for sp in layers)
     err = sum(float(np.sum(sp.scores[~m])) / max(sp.norm, 1e-30)
               for sp, m in zip(layers, keep))
     return Allocation(keep=keep, k=np.asarray(k), cost=cost,
-                      budget=budget_frac * total_full, error=err)
+                      budget=budget_frac * total_full, error=err,
+                      layer_cost=np.asarray(lcost))
 
 
 def dp_allocate(
@@ -182,14 +189,16 @@ def dp_allocate(
         ci = int(np.ceil((pc[-1] - pc[d]) / scale - 1e-12))
         c -= ci
         c = max(c, 0)
-    keep, k, cost, err = [], [], 0.0, 0.0
+    keep, k, cost, err, lcost = [], [], 0.0, 0.0, []
     for l, sp in enumerate(layers):
         order, pv, pc = _layer_order(sp)
         mask = np.ones(sp.scores.shape[0], dtype=bool)
         mask[order[: drops[l]]] = False
         keep.append(mask)
         k.append(sp.scores.shape[0] - drops[l])
-        cost += float(np.sum(sp.tiles[mask])) * sp.d
+        lc = float(np.sum(sp.tiles[mask])) * sp.d
+        lcost.append(lc)
+        cost += lc
         err += pv[drops[l]]
     return Allocation(keep=keep, k=np.asarray(k), cost=cost, budget=budget,
-                      error=err)
+                      error=err, layer_cost=np.asarray(lcost))

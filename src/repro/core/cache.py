@@ -23,6 +23,7 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.core.allocator import (Allocation, LayerSpec, greedy_allocate,
                                   uniform_allocate)
 from repro.core.plan import SamplePlan, build_plan, full_plan
@@ -141,6 +142,14 @@ class PlanCache:
         self.stats.allocations += 1
         self.stats.k_history.append(alloc.k.copy())
         self.stats.host_seconds += time.perf_counter() - t0
+        # Approximation ledger: every allocator run is an accountable
+        # budget event — the conservation invariant (cost ≤ budget) is
+        # enforced HERE, where the greedy guarantee holds, not on raw
+        # steps (bootstrap plans are exact by design).
+        obs.get_ledger().note_allocation(
+            scope=self.label or "full", strategy=self.strategy,
+            cost=float(alloc.cost), budget=float(alloc.budget),
+            k=alloc.k)
         return alloc
 
     def flops_fraction(self) -> float:

@@ -56,6 +56,12 @@ class SamplePlan:
         """FLOPs of SpMM under this plan (Eq. 4b cost, block units)."""
         return 2 * self.n_active * bm * bk * d
 
+    def bytes_moved(self, bm: int, bk: int, d: int) -> int:
+        """f32 bytes an SpMM under this plan streams per call: each active
+        tile plus the (bk, d) dense slab it gathers (ledger cost model —
+        output writes are plan-independent and excluded)."""
+        return self.n_active * (bm * bk + bk * d) * 4
+
 
 def plan_row_ptr(row_ids: jax.Array, n_row_blocks: int) -> jax.Array:
     """Recover the tiles-per-row-block pointer array from sorted row ids.

@@ -131,12 +131,15 @@ def spmm_apply(
     heuristic default is the streaming path).
     """
     if backend == "auto":
+        from repro import obs
         from repro.kernels import autotune
-        cfg = autotune.lookup(autotune.signature(
+        sig = autotune.signature(
             "auto", bm=bm, bk=bk, d=h.shape[-1], s_pad=plan.s_pad,
             n_row_blocks=n_row_blocks,
-            n_col_blocks=h.shape[0] // bk), d=h.shape[-1])
+            n_col_blocks=h.shape[0] // bk)
+        cfg = autotune.lookup(sig, d=h.shape[-1])
         backend = cfg.backend
+        obs.get_ledger().note_backend(sig, backend)
         if backend == "pallas":
             from repro.kernels import ops as kops
             if not kops.on_tpu():

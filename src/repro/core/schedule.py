@@ -28,5 +28,9 @@ class RSCSchedule:
     def allocate_due(self, step: int) -> bool:
         return self.use_rsc(step) and (step % self.allocate_every == 0)
 
+    def mode(self, step: int) -> str:
+        """Ledger/trace label for this step: ``"rsc"`` or ``"exact"``."""
+        return "rsc" if self.use_rsc(step) else "exact"
+
     def switch_step(self) -> int:
         return int(self.total_steps * self.rsc_fraction)

@@ -24,7 +24,10 @@ one replica at a time.
   replica (``sampled_budget`` < 1) whose measured relative error fits
   the budget, the query is routed there — sampled replicas rebuild
   faster (smaller gathers), trading accuracy for freshness/latency
-  explicitly.
+  explicitly. The routing threshold is the UPPER bootstrap confidence
+  bound of the measured error (re-probed after every update drain), not
+  a point estimate: a budget only routes sampled when the whole CI fits
+  under it.
 """
 from __future__ import annotations
 
@@ -41,6 +44,29 @@ from repro.infer.serve import NodeServer
 from repro.infer.stream import StreamConfig
 
 _STOP = object()
+
+
+class LabelCap:
+    """Bounds the distinct values a metric label may take.
+
+    The first ``limit`` distinct values pass through; every later value
+    maps to ``"other"`` — an unbounded replica fleet (or adversarial
+    names) can no longer blow up the registry's key space or the
+    exposition payload.
+    """
+
+    def __init__(self, limit: int = 8, overflow: str = "other"):
+        self.limit = int(limit)
+        self.overflow = overflow
+        self._seen: set[str] = set()
+
+    def __call__(self, value: str) -> str:
+        if value in self._seen:
+            return value
+        if len(self._seen) < self.limit:
+            self._seen.add(value)
+            return value
+        return self.overflow
 
 
 class UpdateLog:
@@ -121,18 +147,14 @@ class ServeFrontend:
             for i in range(1, replicas)]
         self.sampled_server: NodeServer | None = None
         self.sampled_rel_error = float("inf")
+        self.sampled_rel_ci = (float("inf"), float("inf"))
+        self._replica_label = LabelCap(limit=max(8, replicas + 2))
         if sampled_budget is not None and sampled_budget < 1.0:
             scfg = dataclasses.replace(cfg, sample_budget=sampled_budget)
             self.sampled_server = NodeServer(
                 graph, model, params, scfg, sampled=True,
                 incremental=incremental, name="sampled")
-            exact = first._snap.logits[: first.n_nodes]
-            approx = self.sampled_server._snap.logits[: first.n_nodes]
-            self.sampled_rel_error = float(
-                np.linalg.norm(approx - exact)
-                / max(np.linalg.norm(exact), 1e-9))
-            obs.get_registry().gauge("frontend.sampled_rel_error",
-                                     self.sampled_rel_error)
+            self._probe_sampled_error()
 
         self._rr = 0
         self._queue: queue.Queue = queue.Queue()
@@ -147,15 +169,55 @@ class ServeFrontend:
         self._dispatcher.start()
         self._updater.start()
 
+    # ------------------------------------------------------- error probe
+    def _probe_sampled_error(self, max_nodes: int = 2048,
+                             n_boot: int = 200) -> None:
+        """Measure the sampled replica's relative error with a bootstrap CI.
+
+        Point estimate: the global Frobenius ratio ‖approx − exact‖/‖exact‖
+        over the two live snapshots. The CI bootstraps the SAME statistic
+        over node resamples (per-node squared norms are sufficient), so it
+        brackets the point estimate tightly on homogeneous graphs and
+        widens exactly when a few nodes dominate the error — the case
+        where trusting a point estimate mis-routes. The CI is clamped to
+        contain the point estimate, keeping routing monotone in the
+        budget.
+        """
+        first = self.replicas[0]
+        exact = np.asarray(first._snap.logits[: first.n_nodes],
+                           dtype=np.float64)
+        approx = np.asarray(
+            self.sampled_server._snap.logits[: first.n_nodes],
+            dtype=np.float64)
+        d2 = np.sum((approx - exact) ** 2, axis=-1)
+        e2 = np.sum(exact ** 2, axis=-1)
+        point = float(np.sqrt(d2.sum() / max(e2.sum(), 1e-18)))
+        rng = np.random.default_rng(0)
+        if d2.size > max_nodes:
+            sub = rng.choice(d2.size, size=max_nodes, replace=False)
+            d2, e2 = d2[sub], e2[sub]
+        idx = rng.integers(0, d2.size, size=(n_boot, d2.size))
+        ratios = np.sqrt(d2[idx].sum(axis=1)
+                         / np.maximum(e2[idx].sum(axis=1), 1e-18))
+        lo, hi = np.percentile(ratios, [2.5, 97.5])
+        self.sampled_rel_error = point
+        self.sampled_rel_ci = (float(min(lo, point)), float(max(hi, point)))
+        reg = obs.get_registry()
+        reg.gauge("frontend.sampled_rel_error", point)
+        reg.gauge("frontend.sampled_rel_ci_lo", self.sampled_rel_ci[0])
+        reg.gauge("frontend.sampled_rel_ci_hi", self.sampled_rel_ci[1])
+
     # -------------------------------------------------------------- query
     def submit(self, node_ids, *, error_budget: float | None = None
                ) -> _Request:
         """Enqueue a query; returns a waitable request handle."""
         self._check_error()
+        if self._closed:
+            raise RuntimeError("frontend closed")
         ids = np.asarray(node_ids, dtype=np.int64)
         use_sampled = (error_budget is not None
                        and self.sampled_server is not None
-                       and error_budget >= self.sampled_rel_error)
+                       and error_budget >= self.sampled_rel_ci[1])
         req = _Request(ids, use_sampled)
         self._queue.put(req)
         return req
@@ -221,6 +283,7 @@ class ServeFrontend:
             while True:
                 req = self._queue.get()
                 if req is _STOP:
+                    self._drain_closed()
                     return
                 batch = [req]
                 n_ids = req.ids.size
@@ -247,20 +310,37 @@ class ServeFrontend:
                     r.error = e
                     r.event.set()
 
+    def _drain_closed(self):
+        """Fail every request still queued at shutdown instead of leaving
+        its waiter to hit the timeout."""
+        err = RuntimeError("frontend closed")
+        while True:
+            try:
+                r = self._queue.get_nowait()
+            except queue.Empty:
+                return
+            if r is _STOP:
+                continue
+            r.error = err
+            r.event.set()
+
     def _answer(self, group, sampled: bool, latest: int, reg):
         srv = (self.sampled_server if sampled else self._pick_replica())
+        # Metric label, not identity: capped cardinality (overflow lands
+        # in "other") so a large fleet cannot blow up the registry.
+        rlabel = self._replica_label(srv.name)
         ids = np.concatenate([r.ids for r in group])
         t0 = time.perf_counter()
         out, (version, applied, created) = srv.query(ids, with_meta=True)
         now = time.perf_counter()
         reg.observe("frontend.batch_size", float(ids.size),
-                    replica=srv.name)
+                    replica=rlabel)
         reg.observe("frontend.batch_requests", float(len(group)))
         reg.observe("frontend.snapshot_age_ms",
                     max(time.time() - created, 0.0) * 1e3,
-                    replica=srv.name)
+                    replica=rlabel)
         reg.gauge("frontend.staleness", float(latest - applied),
-                  replica=srv.name)
+                  replica=rlabel)
         off = 0
         for r in group:
             r.result = QueryResult(
@@ -269,11 +349,11 @@ class ServeFrontend:
                 replica=srv.name, sampled=sampled,
                 queue_ms=(t0 - r.t_submit) * 1e3)
             reg.observe("frontend.queue_wait_ms", r.result.queue_ms,
-                        replica=srv.name)
+                        replica=rlabel)
             off += r.ids.size
             r.event.set()
         reg.observe("frontend.dispatch_ms", (now - t0) * 1e3,
-                    replica=srv.name)
+                    replica=rlabel)
 
     def _update_loop(self):
         reg = obs.get_registry()
@@ -290,15 +370,20 @@ class ServeFrontend:
                         return
                 # apply strictly one replica at a time (round-robin over
                 # the fleet) so N-1 replicas always serve un-shadowed
+                applied_any = False
                 for srv in servers:
                     for seq, add, remove in self.log.since(srv.applied_seq):
                         t0 = time.perf_counter()
                         srv.update_edges(add=add, remove=remove, seq=seq)
+                        applied_any = True
                         reg.observe("frontend.rebuild_ms",
                                     (time.perf_counter() - t0) * 1e3,
-                                    replica=srv.name)
+                                    replica=self._replica_label(srv.name))
                         with self._apply_cond:
                             self._apply_cond.notify_all()
+                if applied_any and self.sampled_server is not None:
+                    # Both snapshots moved: the routing CI is stale.
+                    self._probe_sampled_error()
         except BaseException as e:
             self._error = e
             with self._apply_cond:
@@ -315,10 +400,17 @@ class ServeFrontend:
             "min_applied_seq": self.min_applied_seq(),
             "sampled_rel_error": (None if self.sampled_server is None
                                   else round(self.sampled_rel_error, 6)),
+            "sampled_rel_ci": (None if self.sampled_server is None
+                               else [round(c, 6)
+                                     for c in self.sampled_rel_ci]),
             "servers": [s.stats() for s in servers],
         }
 
     def close(self) -> None:
+        """Graceful shutdown: new submits raise, queued requests already
+        in flight are answered (they precede the stop marker in queue
+        order), anything racing in behind it fails fast with
+        ``RuntimeError`` instead of timing out, both threads join."""
         if self._closed:
             return
         self._closed = True

@@ -375,6 +375,7 @@ def get_or_tune_auto(*, bm: int, bk: int, d: int, s_pad: int,
     cfg = _cache.get(sig)
     if cfg is not None:
         _cache.stats.hits += 1
+        obs.get_ledger().note_backend(sig, cfg.backend)
         return cfg
     reg = obs.get_registry()
     best: tuple[float, SpmmConfig, dict] | None = None
@@ -392,6 +393,7 @@ def get_or_tune_auto(*, bm: int, bk: int, d: int, s_pad: int,
                provenance={**prov, "backend": cfg.backend})
     obs.get_tracer().instant("autotune_auto", sig=sig, us=round(us, 1),
                              backend=cfg.backend)
+    obs.get_ledger().note_backend(sig, cfg.backend)
     return cfg
 
 

@@ -45,6 +45,8 @@ def bcoo_spmm(blocks, sel, row_ids, col_ids, h, *, n_row_blocks, bm, bk,
             bm=bm, bk=bk, d=d, s_pad=sel.shape[0],
             n_row_blocks=n_row_blocks, n_col_blocks=h.shape[0] // bk)
         bd = autotune.lookup(sig, d=d).bd
+        obs.get_ledger().note_backend(
+            sig, "pallas_interpret" if interpret else "pallas")
     bd = min(bd, d)
     if d % bd:
         # A tuned bd from a pow2 shape bucket may not divide this exact d;

@@ -77,7 +77,9 @@ def run_gnn(args) -> dict:
         stream_budget_mb=args.stream_budget_mb,
         stream_resident_mb=args.stream_resident_mb,
         stream_overlap=args.stream_overlap,
-        strict_compiles=args.strict_compiles)
+        strict_compiles=args.strict_compiles,
+        strict_budget=args.strict_budget,
+        probe_every=args.probe_every, probe_rows=args.probe_rows)
     extra: dict = {}
     if (args.dp > 1 or args.mesh) and not args.minibatch:
         raise SystemExit("--dp/--mesh require --minibatch (the sharded "
@@ -133,6 +135,8 @@ def run_gnn(args) -> dict:
     snap = obs.finalize_from_args(args)
     if snap is not None:
         extra["metrics"] = snap
+    if res.get("ledger") is not None:
+        extra["ledger"] = res["ledger"]
     print(json.dumps({
         "model": args.model, "dataset": args.dataset,
         "rsc": args.rsc, "budget": args.budget,
@@ -259,6 +263,15 @@ def main():
                    help="hard-fail (RetraceError) when a jitted step "
                         "compiles more often than the one-compile-per-"
                         "bucket invariant allows")
+    g.add_argument("--strict-budget", action="store_true",
+                   help="hard-fail (BudgetError) when an allocator run "
+                        "exceeds its FLOPs budget (the approximation "
+                        "ledger's conservation invariant)")
+    g.add_argument("--probe-every", type=int, default=1, metavar="N",
+                   help="run exact-vs-sampled error probes every N "
+                        "epochs when metrics/ledger are on (0 disables)")
+    g.add_argument("--probe-rows", type=int, default=8, metavar="R",
+                   help="row blocks per error probe")
     obs.add_cli_flags(g)
     g.set_defaults(fn=run_gnn)
 

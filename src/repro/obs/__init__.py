@@ -1,47 +1,60 @@
-"""Unified telemetry: metrics registry, tracer, compile sentinel.
+"""Unified telemetry: metrics registry, tracer, ledger, compile sentinel.
 
 Zero-dependency observability substrate for the whole stack. One
 process-wide :class:`Observability` bundle holds a
-:class:`~repro.obs.registry.MetricsRegistry` and a
-:class:`~repro.obs.trace.Tracer`, each independently enable-able:
+:class:`~repro.obs.registry.MetricsRegistry`, a
+:class:`~repro.obs.trace.Tracer` and a
+:class:`~repro.obs.ledger.ApproxLedger`, each independently enable-able:
 
     from repro import obs
-    obs.configure(metrics=True, trace=True)
+    obs.configure(metrics=True, trace=True, ledger=True)
     ...
     obs.get_registry().snapshot()
     obs.get_tracer().export_chrome("trace.json")
+    obs.get_ledger().snapshot()
 
-Both default to DISABLED — every instrumentation site in the engine,
+All default to DISABLED — every instrumentation site in the engine,
 pipeline, kernels and serving layers checks one attribute and returns,
 so the uninstrumented hot path pays (benchmarked in
 ``benchmarks/obs_overhead.py``) well under 2%. Tests swap a fresh bundle
 in via :func:`reset`.
+
+``--metrics-port N`` (see :func:`add_cli_flags`) additionally starts the
+background HTTP exposition endpoint (:mod:`repro.obs.export`) serving
+the live registry + ledger as Prometheus text and JSON while the run is
+in flight; it implies ``--metrics`` and enables the ledger.
 """
 from __future__ import annotations
 
 from repro.obs.clock import GuardedClock, perf_now
-from repro.obs.registry import MetricsRegistry
+from repro.obs.ledger import ApproxLedger, BudgetError
+from repro.obs.registry import MetricsRegistry, snapshot_delta
 from repro.obs.sentinel import CompileSentinel, RetraceError, jit_compiles
 from repro.obs.trace import Tracer
 
 __all__ = [
-    "CompileSentinel", "GuardedClock", "MetricsRegistry", "Observability",
-    "RetraceError", "Tracer", "add_cli_flags", "configure",
-    "finalize_from_args", "get_obs", "get_registry", "get_tracer",
-    "jit_compiles", "perf_now", "reset", "setup_from_args",
+    "ApproxLedger", "BudgetError", "CompileSentinel", "GuardedClock",
+    "MetricsRegistry", "Observability", "RetraceError", "Tracer",
+    "add_cli_flags", "configure", "finalize_from_args", "get_ledger",
+    "get_obs", "get_registry", "get_tracer", "jit_compiles", "perf_now",
+    "reset", "setup_from_args", "snapshot_delta",
 ]
 
 
 class Observability:
-    """A registry + tracer pair sharing one lifecycle."""
+    """A registry + tracer + ledger triple sharing one lifecycle."""
 
-    def __init__(self, metrics: bool = False, trace: bool = False):
+    def __init__(self, metrics: bool = False, trace: bool = False,
+                 ledger: bool = False):
         self.registry = MetricsRegistry(enabled=metrics)
         self.tracer = Tracer(enabled=trace)
+        self.ledger = ApproxLedger(enabled=ledger)
+        self.exporter = None   # MetricsExporter when --metrics-port is up
 
     @property
     def enabled(self) -> bool:
-        return self.registry.enabled or self.tracer.enabled
+        return (self.registry.enabled or self.tracer.enabled
+                or self.ledger.enabled)
 
 
 _obs = Observability()
@@ -59,20 +72,31 @@ def get_tracer() -> Tracer:
     return _obs.tracer
 
 
+def get_ledger() -> ApproxLedger:
+    return _obs.ledger
+
+
 def configure(metrics: bool | None = None,
-              trace: bool | None = None) -> Observability:
+              trace: bool | None = None,
+              ledger: bool | None = None) -> Observability:
     """Flip the process-wide enable flags (None = leave as is)."""
     if metrics is not None:
         _obs.registry.enabled = bool(metrics)
     if trace is not None:
         _obs.tracer.enabled = bool(trace)
+    if ledger is not None:
+        _obs.ledger.enabled = bool(ledger)
     return _obs
 
 
-def reset(metrics: bool = False, trace: bool = False) -> Observability:
+def reset(metrics: bool = False, trace: bool = False,
+          ledger: bool = False) -> Observability:
     """Swap in a fresh bundle (tests; also clears all recorded data)."""
     global _obs
-    _obs = Observability(metrics=metrics, trace=trace)
+    _obs.tracer.uninstall_flush()   # old bundle must not write at exit
+    if _obs.exporter is not None:
+        _obs.exporter.close()
+    _obs = Observability(metrics=metrics, trace=trace, ledger=ledger)
     return _obs
 
 
@@ -82,6 +106,12 @@ def add_cli_flags(parser) -> None:
     parser.add_argument("--metrics", action="store_true",
                         help="enable the metrics registry and include its "
                              "snapshot in the result JSON")
+    parser.add_argument("--metrics-port", type=int, default=None,
+                        metavar="PORT",
+                        help="serve live Prometheus-text + JSON metrics on "
+                             "this port while the run is in flight "
+                             "(implies --metrics; 0 = ephemeral port); "
+                             "also enables the approximation ledger")
     parser.add_argument("--trace-out", default=None, metavar="PATH",
                         help="enable tracing; write a Chrome-trace JSON "
                              "(open at ui.perfetto.dev or chrome://tracing)")
@@ -91,16 +121,33 @@ def add_cli_flags(parser) -> None:
 
 
 def setup_from_args(args) -> Observability:
-    """Flip the process-wide flags from parsed ``add_cli_flags`` args."""
-    return configure(metrics=bool(args.metrics),
-                     trace=bool(args.trace_out or args.trace_jsonl))
+    """Flip the process-wide flags from parsed ``add_cli_flags`` args;
+    start the exposition endpoint and arm crash-safe trace flushing."""
+    port = getattr(args, "metrics_port", None)
+    metrics = bool(args.metrics or port is not None)
+    ob = configure(metrics=metrics,
+                   trace=bool(args.trace_out or args.trace_jsonl),
+                   ledger=metrics)
+    if args.trace_out or args.trace_jsonl:
+        # Armed NOW, not at finalize: a crash mid-run still writes traces.
+        ob.tracer.install_flush(chrome=args.trace_out,
+                                jsonl=args.trace_jsonl)
+    if port is not None:
+        from repro.obs.export import MetricsExporter
+        ob.exporter = MetricsExporter(port=port, registry=ob.registry,
+                                      ledger=ob.ledger)
+        print(f"[obs] metrics exposition at {ob.exporter.url}/metrics")
+    return ob
 
 
 def finalize_from_args(args) -> dict | None:
-    """Write the requested trace files; return the metrics snapshot
-    (``None`` when ``--metrics`` was not passed)."""
-    if args.trace_out:
-        _obs.tracer.export_chrome(args.trace_out)
-    if args.trace_jsonl:
-        _obs.tracer.write_jsonl(args.trace_jsonl)
-    return _obs.registry.snapshot() if args.metrics else None
+    """Write the requested trace files, stop the exposition endpoint;
+    return the metrics snapshot (``None`` when metrics were off)."""
+    if args.trace_out or args.trace_jsonl:
+        _obs.tracer.install_flush(chrome=args.trace_out,
+                                  jsonl=args.trace_jsonl)
+        _obs.tracer.flush()
+    if _obs.exporter is not None:
+        _obs.exporter.close()
+        _obs.exporter = None
+    return _obs.registry.snapshot() if _obs.registry.enabled else None

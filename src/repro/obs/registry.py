@@ -153,3 +153,30 @@ class MetricsRegistry:
             self._counters.clear()
             self._gauges.clear()
             self._hists.clear()
+
+
+def snapshot_delta(before: dict, after: dict) -> dict:
+    """Per-instrument increments between two ``snapshot()`` dicts.
+
+    Lets a test assert "this step incremented counter X by 2 and added 3
+    histogram observations" WITHOUT ``reset()``-ing the process-wide
+    registry out from under concurrently-running code. Counters report
+    ``after - before`` (new keys count from 0); gauges report keys whose
+    value changed (new value); histograms report count/sum deltas for
+    keys with new observations.
+    """
+    counters = {}
+    for k, v in after.get("counters", {}).items():
+        dv = v - before.get("counters", {}).get(k, 0.0)
+        if dv:
+            counters[k] = dv
+    gauges = {k: v for k, v in after.get("gauges", {}).items()
+              if before.get("gauges", {}).get(k) != v}
+    hists = {}
+    for k, h in after.get("histograms", {}).items():
+        prev = before.get("histograms", {}).get(k)
+        dc = h["count"] - (prev["count"] if prev else 0)
+        if dc:
+            hists[k] = {"count": dc,
+                        "sum": h["sum"] - (prev["sum"] if prev else 0.0)}
+    return {"counters": counters, "gauges": gauges, "histograms": hists}

@@ -18,9 +18,17 @@ Timestamps are monotonic (``perf_counter``) microseconds from the
 tracer's construction. The event buffer is bounded (``max_events``);
 overflow drops newest events and counts them in ``dropped`` so a
 truncated trace is never mistaken for a complete one.
+
+**Crash safety:** ``install_flush(chrome=..., jsonl=...)`` registers an
+atexit hook (and arms ``flush()``) so a run that dies mid-span still
+writes valid output — finished spans are recorded eagerly, so the
+exports are well-formed at any moment. ``flush()`` is idempotent per
+install; re-installing re-arms it (a clean finalize path writes once,
+the atexit backstop becomes a no-op).
 """
 from __future__ import annotations
 
+import atexit
 import json
 import threading
 
@@ -94,6 +102,9 @@ class Tracer:
         self._local = threading.local()
         self._tids: dict[int, int] = {}
         self._tid_names: dict[int, str] = {}
+        self._flush_paths: tuple | None = None
+        self._flushed = False
+        self._atexit_armed = False
 
     # ------------------------------------------------------------ record
     def _stack(self) -> list:
@@ -150,6 +161,43 @@ class Tracer:
             self.dropped = 0
         self._origin = perf_now()
 
+    # ------------------------------------------------------- crash flush
+    def install_flush(self, chrome=None, jsonl=None) -> None:
+        """Arm flush-on-exit: write the given trace files from ``flush()``
+        or, failing that, from an atexit hook — a run that crashes
+        mid-span still leaves valid (truncated-but-well-formed) output."""
+        self._flush_paths = (chrome, jsonl)
+        self._flushed = False
+        if not self._atexit_armed:
+            self._atexit_armed = True
+            atexit.register(self._flush_atexit)
+
+    def uninstall_flush(self) -> None:
+        """Disarm without writing (obs.reset swaps tracers)."""
+        self._flush_paths = None
+
+    def _flush_atexit(self) -> None:
+        try:
+            self.flush()
+        except Exception:       # never let telemetry break interpreter exit
+            pass
+
+    def flush(self) -> bool:
+        """Write the installed trace files once; True if anything wrote."""
+        if self._flushed or not self._flush_paths:
+            return False
+        chrome, jsonl = self._flush_paths
+        if chrome:
+            self.export_chrome(chrome)
+        if jsonl:
+            self.write_jsonl(jsonl)
+        self._flushed = True
+        return bool(chrome or jsonl)
+
+    def flushing(self, chrome=None, jsonl=None):
+        """Context manager: install on enter, flush on exit (incl. raise)."""
+        return _Flushing(self, chrome, jsonl)
+
     # ----------------------------------------------------------- exports
     def write_jsonl(self, path) -> None:
         events = self.snapshot()
@@ -194,3 +242,19 @@ class Tracer:
         with open(path, "w") as f:
             json.dump({"traceEvents": trace, "displayTimeUnit": "ms",
                        "otherData": {"dropped_events": self.dropped}}, f)
+
+
+class _Flushing:
+    """``with tracer.flushing(chrome=..., jsonl=...):`` crash-safe scope."""
+
+    def __init__(self, tracer: Tracer, chrome, jsonl):
+        self._tracer = tracer
+        self._paths = (chrome, jsonl)
+
+    def __enter__(self) -> Tracer:
+        self._tracer.install_flush(*self._paths)
+        return self._tracer
+
+    def __exit__(self, *exc) -> bool:
+        self._tracer.flush()
+        return False

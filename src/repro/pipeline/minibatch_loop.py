@@ -181,6 +181,9 @@ class PooledPlanner:
     def publish(self, registry) -> None:
         self.plan_pool.publish(registry)
 
+    def probe_entries(self):
+        return self.plan_pool.probe_entries()
+
     def state_dict(self):
         return self.plan_pool.state_dict()
 

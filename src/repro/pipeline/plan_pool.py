@@ -68,6 +68,7 @@ class PlanCachePool:
         self.label = label          # e.g. "shard3" in sharded pools
         self.caches: dict[int, PlanCache] = {}
         self.stats = PoolPlanStats()
+        self._last_sid: int | None = None   # most recently served subgraph
         self._visits_since_refresh: dict[int, int] = {}
         self._last_norms: dict[int, dict[str, np.ndarray]] = {}
         # norms each cache's CURRENT plans were refreshed from (None while
@@ -121,7 +122,18 @@ class PlanCachePool:
             self.stats.hits += 1
             reg.counter("plan_pool.hits", pool=pool_label)
         self._visits_since_refresh[sid] += 1
+        self._last_sid = sid
         return cache.plans()
+
+    def probe_entries(self):
+        """(name, at, meta, plan, d) of the most recently served subgraph
+        — error probes sample the pool where training just was. Host
+        operands (``HostBlockCOO``) make these probes pure numpy."""
+        cache = self.caches.get(self._last_sid)
+        if cache is None:
+            return []
+        return [(n, e.at, e.meta, e.plan, e.d)
+                for n, e in cache.ops.items()]
 
     def record_norms(self, sub_id: int,
                      norms: dict[str, np.ndarray]) -> None:

@@ -187,6 +187,12 @@ class ShardedPlanner:
         registry.gauge("plan_pool.flops_fraction", self.flops_fraction(),
                        pool="all_shards")
 
+    def probe_entries(self):
+        """Shard 0's latest subgraph stands in for the fleet: error probes
+        estimate plan quality, and every shard runs the same allocator on
+        statistically identical partitions."""
+        return self.pools[0].probe_entries()
+
     def per_shard_summary(self) -> list[dict]:
         return [p.summary() for p in self.pools]
 

@@ -94,6 +94,19 @@ class TrainConfig:
     # step function compiles more often than the one-compile-per-bucket
     # invariant allows (tests/CI; production runs just get the counters).
     strict_compiles: bool = False
+    # ``strict_budget`` does the same for the approximation ledger's
+    # conservation invariant: any allocator run whose achieved cost
+    # exceeds its budget raises BudgetError at the next epoch boundary
+    # (expected to fire only under strategy="uniform", which the paper's
+    # Fig. 6 shows violates the budget by construction).
+    strict_budget: bool = False
+    # Online error probes (obs.probe): every ``probe_every`` epochs run a
+    # cheap exact-vs-sampled comparison on ``probe_rows`` row blocks per
+    # RSC op with a ``probe_dim``-wide Gaussian probe matrix; estimates
+    # land in the ledger time series + registry gauges. 0 disables.
+    probe_every: int = 1
+    probe_rows: int = 8
+    probe_dim: int = 8
 
 
 # ---------------------------------------------------------------------------
@@ -123,6 +136,10 @@ class NullPlanner:
 
     def publish(self, registry) -> None:
         pass
+
+    def probe_entries(self):
+        """(name, at, meta, plan, d) tuples for the error probes."""
+        return []
 
     def state_dict(self):
         return None
@@ -181,6 +198,10 @@ class FullGraphPlanner:
         if k is not None:
             vals = list(k.values()) if isinstance(k, dict) else k
             registry.gauge("rsc.k_latest", float(np.sum(vals)))
+
+    def probe_entries(self):
+        return [(n, e.at, e.meta, e.plan, e.d)
+                for n, e in self.cache.ops.items()]
 
     def state_dict(self):
         """Everything a resumed run needs to rebuild the current plans:
@@ -445,6 +466,10 @@ class Engine:
         # lengths re-bucket on the s_pad quantization grid, which is a
         # bounded-but-unpredictable handful of recompiles by design.
         self.obs = obs.get_obs()
+        # Approximation ledger: per-layer hidden dims + tile shape give it
+        # the FLOPs/bytes cost model; everything else arrives as events.
+        self.ledger = self.obs.ledger
+        self.ledger.set_dims(dims, bm=cfg.block, bk=cfg.block)
         nb = source.n_buckets
         mult = 2 if (mesh is not None and compress_grads) else 1
         rsc_limit = (None if isinstance(self.planner, FullGraphPlanner)
@@ -571,7 +596,9 @@ class Engine:
             best_val, best_test = r["best"]
 
         reg, tracer = self.obs.registry, self.obs.tracer
+        ledger = self.ledger
         for epoch in range(start_epoch, epochs):
+            ledger.set_epoch(epoch)
             self._epoch_src_state = self.source.state_dict()
             batch_it = enumerate(self.source.batches(epoch, skip=skip),
                                  start=skip)
@@ -607,6 +634,13 @@ class Engine:
                                     ops, plans, sub, compress)
                             jax.block_until_ready(lv)
                         self.planner.record(tag, norms)
+                        if ledger.enabled:
+                            # np.asarray on n_active forces a host sync on
+                            # device-stacked DP plans — only when the
+                            # ledger is actually recording.
+                            ledger.note_step(mode="rsc", tiles_by_op={
+                                n: int(np.sum(np.asarray(p.n_active)))
+                                for n, p in plans.items()})
                         # Sampled every 16th step: the gauges are last-
                         # write-wins anyway, and reading them forces a
                         # device→host sync per op that would otherwise
@@ -620,6 +654,8 @@ class Engine:
                                     self.params, self.opt_state,
                                     ops, sub, compress)
                             jax.block_until_ready(lv)
+                        if ledger.enabled:
+                            ledger.note_step(mode="exact")
                     dt = time.perf_counter() - t0
                     sp.set(dur_ms=round(dt * 1e3, 3))
                 reg.observe("engine.step_ms", dt * 1e3, mode=mode)
@@ -650,6 +686,13 @@ class Engine:
                 # registry each epoch (summary()/per-shard stats used to
                 # be write-only), and enforce/record compile counts.
                 self.planner.publish(reg)
+            if (cfg.rsc and cfg.probe_every > 0
+                    and epoch % cfg.probe_every == 0
+                    and (reg.enabled or ledger.enabled)):
+                self._run_probes(epoch, reg)
+            if ledger.enabled:
+                ledger.end_epoch(epoch, reg)
+            ledger.check(f"epoch {epoch}", hard_fail=cfg.strict_budget)
             self.sentinel.check(f"epoch {epoch}")
 
             if epoch % eval_every == 0 or epoch == epochs - 1:
@@ -694,9 +737,43 @@ class Engine:
                                if cfg.rsc else 1.0),
             "compiles": self.runner.compile_counts(),
             "n_buckets": self.source.n_buckets,
+            "ledger": (self.ledger.summary()
+                       if self.ledger.enabled else None),
         }
 
     # ------------------------------------------------------------------
+    def _run_probes(self, epoch: int, reg) -> None:
+        """Epoch-end exact-vs-sampled error probes on every RSC op.
+
+        Pure numpy (obs.probe) against the planner's live plans — no jit,
+        so probes never show up in the compile sentinel or the steady-step
+        timings. Results feed both the ledger time series and the
+        per-layer registry gauges the exposition endpoint serves.
+        """
+        from repro.obs.probe import probe_plan_error
+        cfg = self.cfg
+        entries = self.planner.probe_entries()
+        if not entries:
+            return
+        with self.obs.tracer.span("probe", epoch=epoch):
+            for name, at, meta, plan, d in entries:
+                if plan is None:
+                    continue
+                res = probe_plan_error(
+                    np.asarray(at.blocks), meta, plan,
+                    bm=at.bm, bk=at.bk, n_cols=at.n_col_blocks * at.bk,
+                    op=name, n_rows=cfg.probe_rows,
+                    d_probe=cfg.probe_dim, seed=cfg.seed + epoch)
+                if res is None:
+                    continue
+                self.ledger.note_probe(name, rel_error=res.mean,
+                                       ci_lo=res.ci_lo, ci_hi=res.ci_hi,
+                                       n_rows=res.n_rows)
+                if reg.enabled:
+                    reg.gauge("rsc.probe.rel_error", res.mean, layer=name)
+                    reg.gauge("rsc.probe.ci_lo", res.ci_lo, layer=name)
+                    reg.gauge("rsc.probe.ci_hi", res.ci_hi, layer=name)
+
     @staticmethod
     def _record_rsc_gauges(reg, plans, norms) -> None:
         """Per-layer sampled fraction + gradient-row-norm gauges.

@@ -57,3 +57,8 @@ def random_csr(n: int, density: float, seed: int = 0,
         if not symmetric else np.ones(rows.shape[0], np.float32)
     return CSR.from_coo(rows.astype(np.int64), cols.astype(np.int64),
                         vals, (n, n))
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long end-to-end subprocess runs")

@@ -1,0 +1,411 @@
+"""Approximation ledger: budget-conservation invariant across train modes,
+error-probe calibration against a dense oracle, and the Prometheus/JSON
+exposition endpoint (format conformance + live reads during training)."""
+import json
+import subprocess
+import sys
+import threading
+import time
+import urllib.request
+from pathlib import Path
+
+import numpy as np
+import pytest
+from conftest import random_csr
+
+from repro import obs
+from repro.core.allocator import (LayerSpec, greedy_allocate,
+                                  uniform_allocate)
+from repro.obs.export import (PROM_CONTENT_TYPE, MetricsExporter,
+                              render_prometheus)
+from repro.obs.ledger import ApproxLedger, BudgetError
+from repro.obs.probe import bootstrap_ci, probe_plan_error
+from repro.sparse.topology import sym_normalize
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+@pytest.fixture(autouse=True)
+def _fresh_obs():
+    obs.reset()
+    yield
+    obs.reset()
+
+
+@pytest.fixture(scope="module")
+def graph():
+    from repro.graphs.synthetic import sbm_graph
+    return sbm_graph(n_nodes=400, n_clusters=4, avg_degree=10, feat_dim=16,
+                     seed=0)
+
+
+# ------------------------------ ledger unit --------------------------------
+
+def test_ledger_disabled_is_noop():
+    led = ApproxLedger(enabled=False)
+    led.set_dims({"op": 8}, bm=4, bk=4)
+    led.note_allocation(scope="x", strategy="greedy", cost=2.0, budget=1.0)
+    led.note_step(mode="rsc", tiles_by_op={"op": 7})
+    assert led.end_epoch(0) is None
+    assert led.check("noop", hard_fail=True) == 0
+    assert led.allocations == 0 and led.violations == 0
+
+
+def test_ledger_accumulates_and_rolls_epochs():
+    led = ApproxLedger(enabled=True)
+    led.set_dims({"a": 16, "b": 8}, bm=4, bk=4)
+    led.set_epoch(0)
+    led.note_step(mode="rsc", tiles_by_op={"a": 3, "b": 5})
+    led.note_step(mode="rsc", tiles_by_op={"a": 2})
+    led.note_step(mode="exact")
+    row = led.end_epoch(0)
+    assert row["steps"] == {"rsc": 2, "exact": 1}
+    assert row["ops"]["a"]["realized_tiles"] == 5
+    assert row["ops"]["a"]["realized_flops"] == 2 * 5 * 4 * 4 * 16
+    assert row["ops"]["b"]["realized_bytes"] == 5 * (16 + 4 * 8) * 4
+    # next epoch starts clean
+    led.set_epoch(1)
+    led.note_step(mode="rsc", tiles_by_op={"a": 1})
+    row1 = led.end_epoch(1)
+    assert row1["ops"]["a"]["realized_tiles"] == 1
+    s = led.summary()            # realized_tiles is cumulative over epochs
+    assert s["epochs"] == 2 and s["realized_tiles"] == 11
+
+
+def test_greedy_conserves_uniform_violates_and_strict_raises():
+    """The paper's Fig. 6 asymmetry, enforced as a ledger invariant: greedy
+    guarantees cost <= budget, uniform does not (top-k by score can keep the
+    tile-heaviest blocks)."""
+    spec = LayerSpec(scores=np.array([10.0, 1.0, 1.0, 1.0]),
+                     tiles=np.array([100, 1, 1, 1]), d=4, norm=1.0)
+    g = greedy_allocate([spec], 0.5, step_frac=0.25)
+    assert g.cost <= g.budget + 1e-9
+    assert float(np.sum(g.layer_cost)) == pytest.approx(g.cost)
+    u = uniform_allocate([spec], 0.5)
+    assert u.cost > u.budget            # 100-tile block kept by score
+
+    led = ApproxLedger(enabled=True)
+    led.note_allocation(scope="l", strategy="greedy",
+                        cost=g.cost, budget=g.budget, k=g.k)
+    assert led.violations == 0
+    led.note_allocation(scope="l", strategy="uniform",
+                        cost=u.cost, budget=u.budget, k=u.k)
+    assert led.violations == 1
+    assert led.check("soft") == 1        # soft: count only
+    with pytest.raises(BudgetError, match="exceeded the RSC budget"):
+        led.check("hard", hard_fail=True)
+    snap = led.snapshot()
+    assert snap["violations"] == 1 and snap["violation_msgs"]
+
+
+# ------------------------- conservation: full batch ------------------------
+
+def test_fullbatch_budget_conservation(graph):
+    from repro.train.loop import GNNTrainer, TrainConfig
+
+    ob = obs.reset(metrics=True, ledger=True)
+    cfg = TrainConfig(model="gcn", n_layers=2, hidden=32, dropout=0.0,
+                      epochs=12, rsc=True, budget=0.5, block=32,
+                      refresh_every=3, allocate_every=3,
+                      strict_budget=True)        # any violation raises
+    res = GNNTrainer(cfg, graph).train(eval_every=6)
+    led = res["ledger"]
+    assert led["allocations"] >= 1 and led["violations"] == 0
+    assert led["realized_tiles"] > 0
+    for row in ob.ledger.series:
+        for a in row["allocations"]:
+            assert a["ok"] and a["cost"] <= a["budget"] * (1 + 1e-6)
+    # probes ran and produced per-layer CIs bracketing the estimate
+    assert led["probes"]
+    for p in led["probes"].values():
+        assert p["ci_lo"] <= p["rel_error"] <= p["ci_hi"]
+    reg = ob.registry
+    assert reg.get_gauge("rsc.ledger.realized_tiles",
+                         layer="gcn/spmm0") > 0
+    assert reg.get_counter("rsc.ledger.steps", mode="rsc") > 0
+
+
+def test_fullbatch_exact_probe_is_zero_error(graph):
+    """Budget 1.0 + no switching keeps every plan exact: the probes must
+    measure (near-)zero relative error — the calibration anchor."""
+    from repro.train.loop import GNNTrainer, TrainConfig
+
+    obs.reset(ledger=True)
+    cfg = TrainConfig(model="gcn", n_layers=2, hidden=32, epochs=4,
+                      rsc=True, budget=1.0, switching=False, block=32,
+                      refresh_every=2, allocate_every=2)
+    res = GNNTrainer(cfg, graph).train(eval_every=4)
+    probes = res["ledger"]["probes"]
+    assert probes
+    for p in probes.values():
+        assert p["rel_error"] < 1e-8
+        assert p["ci_hi"] < 1e-8
+
+
+# ------------------------- conservation: minibatch -------------------------
+
+def test_minibatch_budget_conservation(graph):
+    from repro.pipeline import MinibatchConfig, MinibatchTrainer
+
+    ob = obs.reset(metrics=True, ledger=True)
+    cfg = MinibatchConfig(model="gcn", n_layers=2, hidden=32, epochs=4,
+                          rsc=True, budget=0.5, n_subgraphs=4, n_buckets=2,
+                          roots=40, walk_length=3, autotune=False,
+                          strict_budget=True)
+    res = MinibatchTrainer(cfg, graph).train(eval_every=2)
+    led = res["ledger"]
+    assert led["allocations"] >= 1 and led["violations"] == 0
+    assert led["realized_tiles"] > 0 and led["probes"]
+    # per-allocation audit across the whole series (per-subgraph scopes)
+    scopes = set()
+    for row in ob.ledger.series:
+        for a in row["allocations"]:
+            assert a["ok"], a
+            scopes.add(a["scope"])
+    assert any(s.startswith("sub") for s in scopes)
+    # dispatch decisions were recorded for the swept signatures
+    assert isinstance(ob.ledger.backends, dict)
+
+
+# --------------------- conservation: DP sharded (CLI) ----------------------
+
+@pytest.mark.slow
+def test_dp_sharded_budget_conservation_cli(tmp_path):
+    """Data-parallel path end-to-end through the launcher (2 simulated host
+    devices): the result JSON must carry a clean ledger."""
+    cmd = [sys.executable, "-m", "repro.launch.train", "gnn",
+           "--dataset", "reddit", "--scale", "0.03", "--model", "gcn",
+           "--layers", "2", "--hidden", "32", "--epochs", "4", "--rsc",
+           "--budget", "0.5", "--minibatch", "--subgraphs", "4",
+           "--roots", "40", "--walk-length", "3", "--buckets", "1",
+           "--dp", "2", "--force-host-devices", "2", "--no-autotune",
+           "--strict-budget", "--metrics"]
+    env = {"PYTHONPATH": str(REPO / "src"), "JAX_PLATFORMS": "cpu",
+           "PATH": "/usr/bin:/bin", "HOME": str(tmp_path)}
+    proc = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                          cwd=str(REPO), timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    led = out["ledger"]
+    assert led["allocations"] >= 1
+    assert led["violations"] == 0
+    assert led["realized_tiles"] > 0
+
+
+# ------------------------------ probe oracle -------------------------------
+
+def _probe_operand(seed=0, n=96, block=16):
+    csr = sym_normalize(random_csr(n, 0.1, seed=seed))
+    from repro.sparse.bcoo import csr_to_bcoo_host
+    at, meta = csr_to_bcoo_host(csr, block, block)
+    return at, meta
+
+
+def test_probe_matches_dense_oracle():
+    """The probe's per-row-block errors must equal a brute-force dense
+    computation of ||(A_exact - A_plan) @ H||_F / ||A_exact @ H||_F on the
+    same probe matrix (same seed => same rows and H)."""
+    from repro.core.plan import build_plan
+
+    at, meta = _probe_operand(seed=5)
+    n_cb = at.n_col_blocks
+    rng = np.random.default_rng(1)
+    keep = rng.random(n_cb) < 0.5
+    keep[0] = True
+    plan = build_plan(meta, keep, at.n_row_blocks, at.s_total)
+
+    seed, n_rows, d_probe = 7, 6, 8
+    res = probe_plan_error(at.blocks, meta, plan, bm=at.bm, bk=at.bk,
+                           n_cols=n_cb * at.bk, n_rows=n_rows,
+                           d_probe=d_probe, seed=seed)
+    assert res is not None and res.n_rows == n_rows
+
+    # Dense oracle: replay the probe's own RNG stream to get the same
+    # row choice + probe matrix, then materialize both operators densely.
+    oracle_rng = np.random.default_rng(seed)
+    all_rows = np.unique(meta.row_ids)
+    rows = np.sort(oracle_rng.choice(all_rows, size=n_rows, replace=False))
+    hb = oracle_rng.standard_normal((n_cb, at.bk, d_probe))
+    h = hb.reshape(n_cb * at.bk, d_probe)
+
+    def dense(row_ids, col_ids, tile_idx):
+        a = np.zeros((at.n_row_blocks * at.bm, n_cb * at.bk))
+        for r, c, s in zip(row_ids, col_ids, tile_idx):
+            a[r * at.bm:(r + 1) * at.bm, c * at.bk:(c + 1) * at.bk] += \
+                at.blocks[s]
+        return a
+
+    exact = dense(meta.row_ids, meta.col_ids,
+                  np.arange(meta.row_ids.shape[0])) @ h
+    sel = np.asarray(plan.sel)
+    live = sel != at.s_total
+    approx = dense(np.asarray(plan.row_ids)[live],
+                   np.asarray(plan.col_ids)[live], sel[live]) @ h
+    for i, r in enumerate(rows):
+        e = exact[r * at.bm:(r + 1) * at.bm]
+        d = e - approx[r * at.bm:(r + 1) * at.bm]
+        want = np.linalg.norm(d) / max(np.linalg.norm(e), 1e-12)
+        assert res.rel_errors[i] == pytest.approx(want, rel=1e-9)
+    assert res.ci_lo <= res.mean <= res.ci_hi
+
+
+def test_probe_full_plan_is_exact():
+    from repro.core.plan import full_plan
+
+    at, meta = _probe_operand(seed=2)
+    plan = full_plan(meta, at.n_row_blocks, at.s_total)
+    res = probe_plan_error(at.blocks, meta, plan, bm=at.bm, bk=at.bk,
+                           n_cols=at.n_col_blocks * at.bk, n_rows=5,
+                           d_probe=4, seed=3)
+    assert res.mean == pytest.approx(0.0, abs=1e-10)
+    assert res.ci_hi == pytest.approx(0.0, abs=1e-10)
+
+
+def test_bootstrap_ci_covers_true_mean():
+    """Calibration: a 95% percentile bootstrap CI over iid draws should
+    cover the true mean in roughly 95% of trials (wide tolerance)."""
+    rng = np.random.default_rng(0)
+    true_mean, hits, trials = 0.3, 0, 60
+    for t in range(trials):
+        sample = rng.exponential(true_mean, size=40)
+        lo, hi = bootstrap_ci(sample, n_boot=300, seed=t)
+        hits += lo <= true_mean <= hi
+    assert hits / trials > 0.75
+    # degenerate sizes
+    assert bootstrap_ci([]) == (pytest.approx(float("nan"), nan_ok=True),
+                                pytest.approx(float("nan"), nan_ok=True))
+    assert bootstrap_ci([2.0]) == (2.0, 2.0)
+
+
+# ----------------------------- exposition ----------------------------------
+
+def test_render_prometheus_conformance():
+    from repro.obs.registry import MetricsRegistry
+
+    reg = MetricsRegistry(enabled=True)
+    reg.counter("engine.steps", 3, mode="rsc")
+    reg.gauge("rsc.ledger.realized_tiles", 42.0, layer="gcn/spmm0")
+    reg.gauge('weird.name-x', 1.0, lbl='va"l\\ue\nz')
+    for v in (1.0, 2.0, 3.0):
+        reg.observe("engine.step_ms", v)
+    text = render_prometheus(reg.snapshot())
+    lines = text.splitlines()
+    # names sanitized to [a-zA-Z0-9_:], one TYPE line per metric name
+    assert "# TYPE engine_steps counter" in lines
+    assert 'engine_steps{mode="rsc"} 3.0' in lines
+    assert "# TYPE rsc_ledger_realized_tiles gauge" in lines
+    assert 'rsc_ledger_realized_tiles{layer="gcn/spmm0"} 42.0' in lines
+    assert "# TYPE weird_name_x gauge" in lines
+    # label escaping: backslash, double quote, newline
+    assert 'weird_name_x{lbl="va\\"l\\\\ue\\nz"} 1.0' in lines
+    # histograms render as summaries with quantiles + _sum + _count
+    assert "# TYPE engine_step_ms summary" in lines
+    assert 'engine_step_ms{quantile="0.5"} 2.0' in lines
+    assert "engine_step_ms_sum 6.0" in lines
+    assert "engine_step_ms_count 3.0" in lines
+    assert sum(ln.startswith("# TYPE engine_step_ms ")
+               for ln in lines) == 1
+
+
+def test_exporter_endpoints_and_content_type():
+    from repro.obs.registry import MetricsRegistry
+
+    reg = MetricsRegistry(enabled=True)
+    reg.gauge("g", 1.5, layer="a/b")
+    led = ApproxLedger(enabled=True)
+    led.note_allocation(scope="s", strategy="greedy", cost=1.0, budget=2.0)
+    led.end_epoch(0)
+    with MetricsExporter(port=0, registry=reg, ledger=led) as ex:
+        with urllib.request.urlopen(f"{ex.url}/metrics") as r:
+            assert r.status == 200
+            assert r.headers["Content-Type"] == PROM_CONTENT_TYPE
+            body = r.read().decode()
+        assert 'g{layer="a/b"} 1.5' in body
+        assert "rsc_ledger_epochs_total 1" in body
+        assert "rsc_ledger_alloc_violations_total 0" in body
+        with urllib.request.urlopen(f"{ex.url}/metrics.json") as r:
+            doc = json.loads(r.read())
+        assert doc["metrics"]["gauges"]["g{layer=a/b}"] == 1.5
+        assert doc["ledger"]["allocations"] == 1
+        with urllib.request.urlopen(f"{ex.url}/healthz") as r:
+            assert r.read() == b"ok\n"
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(f"{ex.url}/nope")
+
+
+def test_live_endpoint_during_training(graph):
+    """The acceptance path: scrape /metrics while a training run is in
+    flight and find the per-layer ledger + probe-CI series."""
+    from repro.train.loop import GNNTrainer, TrainConfig
+
+    ob = obs.reset(metrics=True, ledger=True)
+    cfg = TrainConfig(model="gcn", n_layers=2, hidden=32, epochs=30,
+                      rsc=True, budget=0.5, block=32, refresh_every=3,
+                      allocate_every=3)
+    tr = GNNTrainer(cfg, graph)
+    with MetricsExporter(port=0, registry=ob.registry,
+                         ledger=ob.ledger) as ex:
+        th = threading.Thread(target=tr.train,
+                              kwargs={"eval_every": 30}, daemon=True)
+        th.start()
+        deadline = time.time() + 120
+        seen_mid_flight = False
+        body = ""
+        while time.time() < deadline:
+            with urllib.request.urlopen(f"{ex.url}/metrics") as r:
+                body = r.read().decode()
+            if "rsc_ledger_realized_tiles{layer=" in body:
+                seen_mid_flight = th.is_alive()
+                break
+            if not th.is_alive():
+                break
+            time.sleep(0.05)
+        th.join(timeout=120)
+        # one final scrape — series must be there even if the loop above
+        # only caught the run's tail
+        with urllib.request.urlopen(f"{ex.url}/metrics") as r:
+            body = r.read().decode()
+    assert 'rsc_ledger_realized_tiles{layer="gcn/spmm0"}' in body
+    assert 'rsc_probe_ci_hi{layer="gcn/spmm0"}' in body
+    assert 'rsc_probe_ci_lo{layer="gcn/spmm0"}' in body
+    assert "rsc_ledger_alloc_violations_total 0" in body
+    del seen_mid_flight  # informational only: tiny runs may finish first
+
+
+# --------------------------- trajectory gate -------------------------------
+
+def _run_traj(args, tmp_path):
+    env = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
+           "HOME": str(tmp_path)}
+    return subprocess.run(
+        [sys.executable, "-m", "benchmarks.trajectory", *args],
+        capture_output=True, text=True, env=env, cwd=str(REPO),
+        timeout=120)
+
+
+def test_trajectory_self_comparison_passes(tmp_path):
+    out = tmp_path / "traj.json"
+    p = _run_traj(["--fresh", "BENCH_obs.json", "--gate",
+                   "--out", str(out)], tmp_path)
+    assert p.returncode == 0, p.stderr
+    rep = json.loads(out.read_text())
+    assert rep["schema"] == "rsc/bench_trajectory/v1"
+    assert rep["n_compared"] >= 1 and not rep["regressed"]
+    assert "bench_obs" in rep["observations"]
+
+
+def test_trajectory_injected_regression_fails_gate(tmp_path):
+    out = tmp_path / "traj.json"
+    p = _run_traj(["--fresh", "BENCH_obs.json", "--gate", "--out", str(out),
+                   "--inject", "bench_obs:pass=false"], tmp_path)
+    assert p.returncode == 1
+    rep = json.loads(out.read_text())
+    assert rep["regressed"] and rep["n_regressed"] >= 1
+    regs = rep["benches"]["bench_obs"]["regressions"]
+    assert any(r["metric"] == "pass" and r.get("injected") for r in regs)
+
+    # numeric injection on a lower-is-better ratio metric also trips
+    p2 = _run_traj(["--fresh", "BENCH_obs.json", "--gate",
+                    "--out", str(out),
+                    "--inject", "bench_obs:overhead_frac=0.5"], tmp_path)
+    assert p2.returncode == 1

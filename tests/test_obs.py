@@ -226,3 +226,102 @@ def test_configure_flips_global_flags():
     assert obs.get_obs().enabled
     obs.configure(metrics=False, trace=False)
     assert not obs.get_obs().enabled
+
+
+# ------------------------------ crash flush --------------------------------
+
+def test_flush_writes_once_and_is_idempotent(tmp_path):
+    tr = Tracer(enabled=True)
+    with tr.span("work"):
+        pass
+    chrome, jsonl = tmp_path / "t.json", tmp_path / "t.jsonl"
+    tr.install_flush(chrome=chrome, jsonl=jsonl)
+    assert tr.flush() is True
+    assert tr.flush() is False            # second call: already flushed
+    doc = json.loads(chrome.read_text())
+    assert any(e["ph"] == "X" and e["name"] == "work"
+               for e in doc["traceEvents"])
+    assert Tracer.read_jsonl(jsonl) == tr.snapshot()
+
+
+def test_flushing_scope_writes_on_exception(tmp_path):
+    """A run that raises mid-span still leaves a well-formed trace file."""
+    tr = Tracer(enabled=True)
+    p = tmp_path / "crash.jsonl"
+    with pytest.raises(RuntimeError, match="boom"):
+        with tr.flushing(jsonl=p):
+            tr.instant("before_crash")
+            raise RuntimeError("boom")
+    evs = Tracer.read_jsonl(p)
+    assert [e["name"] for e in evs] == ["before_crash"]
+
+
+def test_uninstall_flush_disarms(tmp_path):
+    tr = Tracer(enabled=True)
+    p = tmp_path / "never.jsonl"
+    tr.install_flush(jsonl=p)
+    tr.uninstall_flush()
+    assert tr.flush() is False and not p.exists()
+
+
+def test_atexit_flush_survives_interpreter_exit(tmp_path):
+    """sys.exit() mid-run (atexit fires, flush() never called explicitly)
+    must still produce the trace files."""
+    import subprocess
+    import sys
+    from pathlib import Path
+
+    out = tmp_path / "atexit.jsonl"
+    code = (
+        "import sys\n"
+        "from repro.obs.trace import Tracer\n"
+        "tr = Tracer(enabled=True)\n"
+        f"tr.install_flush(jsonl={str(out)!r})\n"
+        "tr.instant('unflushed')\n"
+        "sys.exit(0)\n"
+    )
+    repo = Path(__file__).resolve().parents[1]
+    proc = subprocess.run([sys.executable, "-c", code],
+                          capture_output=True, text=True,
+                          env={"PYTHONPATH": str(repo / "src"),
+                               "PATH": "/usr/bin:/bin"}, timeout=120)
+    assert proc.returncode == 0, proc.stderr
+    assert [e["name"] for e in Tracer.read_jsonl(out)] == ["unflushed"]
+
+
+# ----------------------------- snapshot delta ------------------------------
+
+def test_snapshot_delta_reports_increments_only():
+    from repro.obs.registry import snapshot_delta
+
+    reg = MetricsRegistry(enabled=True)
+    reg.counter("steps", 2, mode="rsc")
+    reg.counter("unchanged")
+    reg.gauge("lr", 0.01)
+    reg.gauge("stable", 7.0)
+    reg.observe("ms", 1.0)
+    before = reg.snapshot()
+
+    reg.counter("steps", 3, mode="rsc")
+    reg.counter("born")                    # new counter counts from 0
+    reg.gauge("lr", 0.005)
+    reg.gauge("stable", 7.0)               # rewritten, same value
+    reg.observe("ms", 2.0)
+    reg.observe("ms", 4.0)
+    delta = snapshot_delta(before, reg.snapshot())
+
+    assert delta["counters"] == {"steps{mode=rsc}": 3.0, "born": 1.0}
+    assert delta["gauges"] == {"lr": 0.005}
+    assert delta["histograms"] == {"ms": {"count": 2, "sum": 6.0}}
+
+
+def test_snapshot_delta_empty_when_idle():
+    from repro.obs.registry import snapshot_delta
+
+    reg = MetricsRegistry(enabled=True)
+    reg.counter("c")
+    reg.gauge("g", 1.0)
+    reg.observe("h", 1.0)
+    snap = reg.snapshot()
+    delta = snapshot_delta(snap, reg.snapshot())
+    assert delta == {"counters": {}, "gauges": {}, "histograms": {}}

@@ -370,3 +370,57 @@ def test_frontend_sampled_routing(graph, params):
         none = fe.query(ids)                   # no budget → exact
         assert not none.sampled
         assert np.array_equal(none.logits, exact.logits)
+
+
+def test_frontend_ci_bounds_routing(graph, params):
+    """The router uses the UPPER bootstrap confidence bound, not the point
+    estimate: budgets inside the CI stay exact, budgets at/above ci_hi go
+    sampled, and the CI always brackets the point estimate."""
+    ids = np.arange(0, graph.n, 5)
+    with ServeFrontend(graph, "gcn", params, CFG, replicas=1,
+                       sampled_budget=0.7) as fe:
+        lo, hi = fe.sampled_rel_ci
+        assert 0.0 <= lo <= fe.sampled_rel_error <= hi < float("inf")
+        assert fe.stats()["sampled_rel_ci"] == pytest.approx([lo, hi])
+        below = fe.query(ids, error_budget=lo * 0.9)
+        assert not below.sampled
+        at = fe.query(ids, error_budget=hi)
+        assert at.sampled and at.replica == "sampled"
+
+
+def test_frontend_no_sampled_replica_ci_is_inf(graph, params):
+    with ServeFrontend(graph, "gcn", params, CFG, replicas=1) as fe:
+        assert fe.sampled_rel_ci == (float("inf"), float("inf"))
+        assert fe.stats()["sampled_rel_ci"] is None
+        res = fe.query(np.arange(0, graph.n, 9), error_budget=1e9)
+        assert not res.sampled                # nothing to route to
+
+
+def test_frontend_close_is_graceful(graph, params):
+    """After close(): queued requests fail with a clear error instead of
+    hanging, new submits are refused, and close() is idempotent."""
+    fe = ServeFrontend(graph, "gcn", params, CFG, replicas=1, max_batch=4)
+    ids = np.arange(16)
+    res = fe.query(ids)
+    assert res.logits.shape[0] == ids.size
+    fe.close()
+    fe.close()                                # idempotent
+    with pytest.raises(RuntimeError, match="frontend closed"):
+        fe.submit(ids)
+    with pytest.raises(RuntimeError, match="frontend closed"):
+        fe.query(ids)
+    # dispatcher + updater threads actually exited
+    assert not fe._dispatcher.is_alive()
+    assert not fe._updater.is_alive()
+
+
+def test_label_cap_bounds_cardinality():
+    from repro.infer.frontend import LabelCap
+
+    cap = LabelCap(limit=2)
+    assert [cap(v) for v in ["a", "b", "a", "c", "d", "b"]] == \
+        ["a", "b", "a", "other", "other", "b"]
+    wide = LabelCap(limit=8)
+    names = [f"r{i}" for i in range(8)]
+    assert [wide(n) for n in names] == names
+    assert wide("r8") == "other"
