@@ -50,6 +50,7 @@ _RULES: list[tuple[tuple[str, ...], str, int]] = [
     (("pass",), "bool", +1),
     (("speedup",), "ratio", +1),
     (("hit_rate",), "ratio", +1),
+    (("coverage",), "ratio", +1),
     (("overhead_frac",), "ratio", -1),
     (("rel_error", "test_delta"), "ratio", -1),
     (("qps", "per_s", "partitions_per_s"), "timing", +1),

@@ -35,6 +35,7 @@ import dataclasses
 import queue
 import threading
 import time
+from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
@@ -42,6 +43,8 @@ from repro import obs
 from repro.graphs.synthetic import GraphData
 from repro.infer.serve import NodeServer
 from repro.infer.stream import StreamConfig
+from repro.obs.context import TraceContext, new_trace
+from repro.obs.taillog import TailLog
 
 _STOP = object()
 
@@ -59,32 +62,43 @@ class LabelCap:
         self.limit = int(limit)
         self.overflow = overflow
         self._seen: set[str] = set()
+        # Dispatcher, answer workers and the updater all label metrics
+        # concurrently; without the lock two racing first-sightings could
+        # both pass the size check and overshoot the cap.
+        self._lock = threading.Lock()
 
     def __call__(self, value: str) -> str:
-        if value in self._seen:
-            return value
-        if len(self._seen) < self.limit:
-            self._seen.add(value)
-            return value
-        return self.overflow
+        with self._lock:
+            if value in self._seen:
+                return value
+            if len(self._seen) < self.limit:
+                self._seen.add(value)
+                return value
+            return self.overflow
 
 
 class UpdateLog:
-    """In-memory write-ahead log of edge-update batches (1-based seq)."""
+    """In-memory write-ahead log of edge-update batches (1-based seq).
+
+    Each entry optionally carries the submitter's
+    :class:`~repro.obs.context.TraceContext`, so the applier's rebuild
+    spans (and the streaming recompute underneath them) link back to the
+    ``update_edges`` call that caused them.
+    """
 
     def __init__(self):
         self._lock = threading.Lock()
-        self._entries: list[tuple[int, np.ndarray, np.ndarray]] = []
+        self._entries: list[tuple] = []
 
-    def append(self, add, remove) -> int:
+    def append(self, add, remove, ctx: TraceContext | None = None) -> int:
         add = np.asarray(list(add), dtype=np.int64).reshape(-1, 2)
         remove = np.asarray(list(remove), dtype=np.int64).reshape(-1, 2)
         with self._lock:
             seq = len(self._entries) + 1
-            self._entries.append((seq, add, remove))
+            self._entries.append((seq, add, remove, ctx))
             return seq
 
-    def since(self, seq: int) -> list[tuple[int, np.ndarray, np.ndarray]]:
+    def since(self, seq: int) -> list[tuple]:
         """Entries with sequence number > ``seq`` (replica catch-up)."""
         with self._lock:
             return self._entries[seq:]
@@ -106,24 +120,55 @@ class QueryResult:
     replica: str
     sampled: bool
     queue_ms: float       # submit → dispatch wait
+    trace_id: str | None = None   # causal trace id (tracing enabled)
+    # Phase breakdown of the request's wall-clock: queue_ms (submit →
+    # dispatcher pickup), batch_ms (batch formation), handoff_ms
+    # (dispatcher → answer worker), pin_ms (snapshot acquire), gather_ms
+    # (logits gather), answer_ms (worker total), total_ms (submit →
+    # answered), and — filled in by ``wait()``, the only place it is
+    # measurable — wake_ms (answered → waiter resumed). Staleness lag
+    # rides separately in ``staleness`` (log entries, not time).
+    phases: dict | None = None
 
 
 class _Request:
-    __slots__ = ("ids", "sampled", "event", "result", "error", "t_submit")
+    __slots__ = ("ids", "sampled", "event", "result", "error", "t_submit",
+                 "deadline", "ctx", "t_done")
 
-    def __init__(self, ids: np.ndarray, sampled: bool):
+    def __init__(self, ids: np.ndarray, sampled: bool,
+                 deadline: float | None = None,
+                 ctx: TraceContext | None = None):
         self.ids = ids
         self.sampled = sampled
         self.event = threading.Event()
         self.result: QueryResult | None = None
         self.error: BaseException | None = None
         self.t_submit = time.perf_counter()
+        self.deadline = deadline   # absolute perf_counter cutoff, or None
+        self.ctx = ctx
+        self.t_done: float | None = None   # stamped before event.set()
 
     def wait(self, timeout: float | None) -> QueryResult:
-        if not self.event.wait(timeout):
+        ok = self.event.wait(timeout)
+        now = time.perf_counter()
+        if self.ctx is not None:
+            tracer = obs.get_tracer()
+            if self.t_done is not None:
+                # Client-side wake latency: the only interval no serving
+                # thread can attribute.
+                tracer.span_at(self.ctx, "wake", self.t_done, now)
+            tracer.span_at(self.ctx, "request", self.t_submit, now,
+                           n_ids=int(self.ids.size), sampled=self.sampled)
+        if not ok:
             raise TimeoutError("query not answered in time")
         if self.error is not None:
             raise self.error
+        if (self.result is not None and self.result.phases is not None
+                and self.t_done is not None):
+            # Only the waiter can time its own wake-up; under load (a
+            # rebuild holding the GIL) this is the dominant unattributed
+            # tail phase, so it goes into the breakdown too.
+            self.result.phases["wake_ms"] = (now - self.t_done) * 1e3
         return self.result
 
 
@@ -134,11 +179,14 @@ class ServeFrontend:
                  cfg: StreamConfig = StreamConfig(), *,
                  replicas: int = 2, max_batch: int = 256,
                  sampled_budget: float | None = None,
-                 incremental: bool = True):
+                 incremental: bool = True, slow_k: int = 16):
         if replicas < 1:
             raise ValueError("need at least one replica")
         self.max_batch = int(max_batch)
         self.log = UpdateLog()
+        # Slowest-K tail reservoir: always on (O(log K) per request),
+        # served at /debug/slow; slow_k=0 disables.
+        self.taillog = TailLog(k=slow_k) if slow_k > 0 else None
         first = NodeServer(graph, model, params, cfg,
                            incremental=incremental, name="r0")
         self.replicas = [first] + [
@@ -162,6 +210,14 @@ class ServeFrontend:
         self._applying = False
         self._error: BaseException | None = None
         self._closed = False
+        # Answer pool: the dispatcher only forms batches and picks the
+        # replica (keeping rotation deterministic); the snapshot read for
+        # batch t runs on a worker while batch t+1 is already forming —
+        # and gives every query a third thread track for its trace.
+        n_workers = min(len(self.replicas)
+                        + (1 if self.sampled_server else 0) + 1, 8)
+        self._pool = ThreadPoolExecutor(max_workers=n_workers,
+                                        thread_name_prefix="serve-answer")
         self._dispatcher = threading.Thread(
             target=self._dispatch_loop, daemon=True, name="serve-dispatch")
         self._updater = threading.Thread(
@@ -208,9 +264,16 @@ class ServeFrontend:
         reg.gauge("frontend.sampled_rel_ci_hi", self.sampled_rel_ci[1])
 
     # -------------------------------------------------------------- query
-    def submit(self, node_ids, *, error_budget: float | None = None
-               ) -> _Request:
-        """Enqueue a query; returns a waitable request handle."""
+    def submit(self, node_ids, *, error_budget: float | None = None,
+               timeout: float | None = None) -> _Request:
+        """Enqueue a query; returns a waitable request handle.
+
+        ``timeout`` propagates the caller's deadline into the request:
+        the dispatcher drops requests whose deadline already passed
+        instead of performing a snapshot read whose waiter has raised
+        ``TimeoutError`` (counted as ``frontend.deadline_dropped``).
+        Every submit gets a fresh trace context when tracing is on.
+        """
         self._check_error()
         if self._closed:
             raise RuntimeError("frontend closed")
@@ -218,14 +281,19 @@ class ServeFrontend:
         use_sampled = (error_budget is not None
                        and self.sampled_server is not None
                        and error_budget >= self.sampled_rel_ci[1])
-        req = _Request(ids, use_sampled)
+        ctx = new_trace() if obs.get_tracer().enabled else None
+        deadline = (time.perf_counter() + timeout
+                    if timeout is not None else None)
+        req = _Request(ids, use_sampled, deadline=deadline, ctx=ctx)
+        obs.get_registry().counter("frontend.requests")
         self._queue.put(req)
         return req
 
     def query(self, node_ids, *, error_budget: float | None = None,
               timeout: float | None = 30.0) -> QueryResult:
         """Synchronous query through the batching queue."""
-        return self.submit(node_ids, error_budget=error_budget).wait(timeout)
+        return self.submit(node_ids, error_budget=error_budget,
+                           timeout=timeout).wait(timeout)
 
     # ------------------------------------------------------------ updates
     def update_edges(self, add=(), remove=(), *, wait: bool = False,
@@ -235,7 +303,13 @@ class ServeFrontend:
         sequence number; ``wait=True`` blocks until every replica has
         applied it."""
         self._check_error()
-        seq = self.log.append(add, remove)
+        tracer = obs.get_tracer()
+        ctx = new_trace() if tracer.enabled else None
+        t0 = time.perf_counter()
+        seq = self.log.append(add, remove, ctx=ctx)
+        if ctx is not None:
+            tracer.span_at(ctx, "update_submit", t0, time.perf_counter(),
+                           seq=seq)
         with self._apply_cond:
             self._apply_cond.notify_all()
         if wait:
@@ -278,6 +352,7 @@ class ServeFrontend:
 
     def _dispatch_loop(self):
         reg = obs.get_registry()
+        tracer = obs.get_tracer()
         batch: list[_Request] = []
         try:
             while True:
@@ -285,6 +360,7 @@ class ServeFrontend:
                 if req is _STOP:
                     self._drain_closed()
                     return
+                t_pickup = time.perf_counter()
                 batch = [req]
                 n_ids = req.ids.size
                 while n_ids < self.max_batch:
@@ -297,12 +373,45 @@ class ServeFrontend:
                         break
                     batch.append(nxt)
                     n_ids += nxt.ids.size
+                # Abandoned waiters: the submit deadline already passed,
+                # the client raised TimeoutError — a snapshot read for
+                # them is dead work. Drop before forming the batch.
+                live = []
+                for r in batch:
+                    if r.deadline is not None and t_pickup > r.deadline:
+                        r.error = TimeoutError(
+                            "deadline exceeded before dispatch")
+                        r.t_done = t_pickup
+                        reg.counter("frontend.deadline_dropped")
+                        r.event.set()
+                        continue
+                    live.append(r)
+                batch = live
+                if not batch:
+                    continue
                 latest = self.log.latest_seq
                 for sampled in (False, True):
                     group = [r for r in batch if r.sampled is sampled]
                     if not group:
                         continue
-                    self._answer(group, sampled, latest, reg)
+                    # Replica rotation stays on the dispatcher thread so
+                    # round-robin order is deterministic; the snapshot
+                    # read itself runs on the answer pool.
+                    srv = (self.sampled_server if sampled
+                           else self._pick_replica())
+                    t_handoff = time.perf_counter()
+                    if tracer.enabled:
+                        for r in group:
+                            if r.ctx is None:
+                                continue
+                            tracer.span_at(r.ctx, "queue",
+                                           r.t_submit, t_pickup)
+                            tracer.span_at(r.ctx, "batch_form",
+                                           t_pickup, t_handoff,
+                                           batch=len(group),
+                                           replica=srv.name)
+                    self._pool.submit(self._answer, group, srv, sampled,
+                                      latest, reg, t_pickup, t_handoff)
         except BaseException as e:   # surface on the next caller
             self._error = e
             for r in batch:
@@ -324,36 +433,88 @@ class ServeFrontend:
             r.error = err
             r.event.set()
 
-    def _answer(self, group, sampled: bool, latest: int, reg):
-        srv = (self.sampled_server if sampled else self._pick_replica())
-        # Metric label, not identity: capped cardinality (overflow lands
-        # in "other") so a large fleet cannot blow up the registry.
-        rlabel = self._replica_label(srv.name)
-        ids = np.concatenate([r.ids for r in group])
-        t0 = time.perf_counter()
-        out, (version, applied, created) = srv.query(ids, with_meta=True)
-        now = time.perf_counter()
-        reg.observe("frontend.batch_size", float(ids.size),
-                    replica=rlabel)
-        reg.observe("frontend.batch_requests", float(len(group)))
-        reg.observe("frontend.snapshot_age_ms",
-                    max(time.time() - created, 0.0) * 1e3,
-                    replica=rlabel)
-        reg.gauge("frontend.staleness", float(latest - applied),
-                  replica=rlabel)
-        off = 0
-        for r in group:
-            r.result = QueryResult(
-                logits=out[off: off + r.ids.size], version=version,
-                applied_seq=applied, staleness=max(latest - applied, 0),
-                replica=srv.name, sampled=sampled,
-                queue_ms=(t0 - r.t_submit) * 1e3)
-            reg.observe("frontend.queue_wait_ms", r.result.queue_ms,
+    def _answer(self, group, srv: NodeServer, sampled: bool, latest: int,
+                reg, t_pickup: float, t_handoff: float):
+        """Answer one batch on the pool; never raises (pool would eat it).
+
+        Fills each request's :class:`QueryResult` with the full phase
+        breakdown, records the worker-side spans, and offers the request
+        to the slowest-K tail reservoir."""
+        tracer = obs.get_tracer()
+        t_w0 = time.perf_counter()
+        try:
+            # Metric label, not identity: capped cardinality (overflow
+            # lands in "other") so a large fleet cannot blow up the
+            # registry.
+            rlabel = self._replica_label(srv.name)
+            ids = np.concatenate([r.ids for r in group])
+            sphases: dict = {}
+            out, (version, applied, created) = srv.query(
+                ids, with_meta=True, phases=sphases)
+            t_done = time.perf_counter()
+            pin_ms = sphases.get("pin_ms", 0.0)
+            gather_ms = sphases.get("gather_ms", 0.0)
+            reg.observe("frontend.batch_size", float(ids.size),
                         replica=rlabel)
-            off += r.ids.size
-            r.event.set()
-        reg.observe("frontend.dispatch_ms", (now - t0) * 1e3,
-                    replica=rlabel)
+            reg.observe("frontend.batch_requests", float(len(group)))
+            reg.observe("frontend.snapshot_age_ms",
+                        max(time.time() - created, 0.0) * 1e3,
+                        replica=rlabel)
+            reg.gauge("frontend.staleness", float(latest - applied),
+                      replica=rlabel)
+            off = 0
+            staleness = max(latest - applied, 0)
+            for r in group:
+                phases = {
+                    "queue_ms": (t_pickup - r.t_submit) * 1e3,
+                    "batch_ms": (t_handoff - t_pickup) * 1e3,
+                    "handoff_ms": (t_w0 - t_handoff) * 1e3,
+                    "pin_ms": pin_ms,
+                    "gather_ms": gather_ms,
+                    "answer_ms": (t_done - t_w0) * 1e3,
+                    "total_ms": (t_done - r.t_submit) * 1e3,
+                }
+                r.result = QueryResult(
+                    logits=out[off: off + r.ids.size], version=version,
+                    applied_seq=applied, staleness=staleness,
+                    replica=srv.name, sampled=sampled,
+                    queue_ms=phases["queue_ms"],
+                    trace_id=(r.ctx.trace_id if r.ctx else None),
+                    phases=phases)
+                reg.observe("frontend.queue_wait_ms", phases["queue_ms"],
+                            replica=rlabel)
+                reg.observe("frontend.request_ms", phases["total_ms"],
+                            replica=rlabel)
+                off += r.ids.size
+                if r.ctx is not None:
+                    tracer.span_at(r.ctx, "handoff", t_handoff, t_w0)
+                    tracer.span_at(r.ctx, "answer", t_w0, t_done,
+                                   replica=srv.name,
+                                   n_ids=int(r.ids.size),
+                                   pin_ms=round(pin_ms, 3),
+                                   gather_ms=round(gather_ms, 3))
+                r.t_done = t_done
+                r.event.set()
+                if self.taillog is not None:
+                    self.taillog.offer(phases["total_ms"], {
+                        "trace_id": (r.ctx.trace_id if r.ctx else None),
+                        "replica": srv.name,
+                        "sampled": sampled,
+                        "n_ids": int(r.ids.size),
+                        "staleness": staleness,
+                        "phases": {k: round(v, 3)
+                                   for k, v in phases.items()},
+                    })
+            reg.observe("frontend.dispatch_ms", (t_done - t_pickup) * 1e3,
+                        replica=rlabel)
+        except BaseException as e:
+            self._error = e
+            for r in group:
+                if not r.event.is_set():
+                    r.error = e
+                    r.t_done = time.perf_counter()
+                    reg.counter("frontend.failed")
+                    r.event.set()
 
     def _update_loop(self):
         reg = obs.get_registry()
@@ -371,10 +532,17 @@ class ServeFrontend:
                 # apply strictly one replica at a time (round-robin over
                 # the fleet) so N-1 replicas always serve un-shadowed
                 applied_any = False
+                tracer = obs.get_tracer()
                 for srv in servers:
-                    for seq, add, remove in self.log.since(srv.applied_seq):
+                    for seq, add, remove, ctx in self.log.since(
+                            srv.applied_seq):
                         t0 = time.perf_counter()
-                        srv.update_edges(add=add, remove=remove, seq=seq)
+                        # span_in(None, ...) degrades to a fresh root span,
+                        # so the apply is traced even for pre-trace entries.
+                        with tracer.span_in(ctx, "apply_update",
+                                            replica=srv.name, seq=seq):
+                            srv.update_edges(add=add, remove=remove,
+                                             seq=seq)
                         applied_any = True
                         reg.observe("frontend.rebuild_ms",
                                     (time.perf_counter() - t0) * 1e3,
@@ -419,6 +587,7 @@ class ServeFrontend:
             self._apply_cond.notify_all()
         self._dispatcher.join(timeout=5.0)
         self._updater.join(timeout=5.0)
+        self._pool.shutdown(wait=True)
 
     def __enter__(self) -> "ServeFrontend":
         return self

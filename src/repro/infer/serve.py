@@ -206,20 +206,31 @@ class NodeServer:
         return snap
 
     # ------------------------------------------------------------- query
-    def query(self, node_ids, *, with_meta: bool = False):
+    def query(self, node_ids, *, with_meta: bool = False,
+              phases: dict | None = None):
         """Batched logits for original-graph node ids — a snapshot read,
         never blocked by an in-flight update. ``with_meta`` also returns
         ``(version, applied_seq, created_at)`` of the answering snapshot.
+        ``phases``, when given a dict, is filled with the read's internal
+        phase timings in ms: ``pin_ms`` (snapshot acquire under the
+        version lock) and ``gather_ms`` (logits gather + copy) — the tail
+        attribution the frontend folds into each ``QueryResult``.
         """
         t0 = self.clock.now()
         ids = np.asarray(node_ids, dtype=np.int64)
         if ids.size and (ids.min() < 0 or ids.max() >= self.n_nodes):
             raise IndexError(f"node ids must be in [0, {self.n_nodes})")
+        tp0 = time.perf_counter()
         snap = self.acquire_snapshot()
+        tp1 = time.perf_counter()
         try:
             out = snap.logits[self.si.pos[ids]].copy()
         finally:
+            tg1 = time.perf_counter()
             self.release_snapshot(snap)
+        if phases is not None:
+            phases["pin_ms"] = (tp1 - tp0) * 1e3
+            phases["gather_ms"] = (tg1 - tp1) * 1e3
         dt = self.clock.elapsed(t0)
         self.queries += ids.size
         self.query_seconds += dt

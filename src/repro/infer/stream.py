@@ -43,6 +43,7 @@ import numpy as np
 
 from repro import obs
 from repro.core.plan import SamplePlan
+from repro.obs import context as trace_context
 from repro.obs.sentinel import jit_compiles
 from repro.core.rsc_spmm import spmm_apply
 from repro.graphs.synthetic import GraphData
@@ -581,8 +582,13 @@ class StreamingInference:
         tracer = obs.get_tracer()
         for i, ups in pf:
             p = parts[i]
-            with tracer.span("stream_partition", layer=l, mode=mode,
-                             part=i):
+            # Adopt the prefetcher's handoff baton: the partition's compute
+            # span joins the same trace as its upload span (and, when this
+            # rebuild runs under the serving applier, the originating
+            # update_edges call).
+            ictx = trace_context.take_pending() if tracer.enabled else None
+            with tracer.span_in(ictx, "stream_partition", layer=l,
+                                mode=mode, part=i):
                 res = fn(*ups[:5], jnp.asarray(p.n_active, jnp.int32),
                          ups[5], pre_params)
             yield p, res

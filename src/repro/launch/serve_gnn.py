@@ -29,6 +29,7 @@ from repro import obs
 from repro.graphs.datasets import DATASETS, load_dataset
 from repro.infer import NodeServer, ServeFrontend, StreamConfig
 from repro.models.gnn import MODELS
+from repro.obs import slo as slo_mod
 from repro.train.loop import GNNTrainer, TrainConfig
 
 
@@ -108,10 +109,20 @@ def main():
     ap.add_argument("--stream-overlap", action="store_true",
                     help="double-buffer partition uploads against the "
                          "device SpMM during cache builds/rebuilds")
+    ap.add_argument("--slow-log", default=None, metavar="PATH",
+                    help="write the slowest-K request reservoir "
+                         "(/debug/slow content) to this JSON file at exit")
     ap.add_argument("--seed", type=int, default=0)
     obs.add_cli_flags(ap)
+    slo_mod.add_cli_flags(ap)
     args = ap.parse_args()
-    obs.setup_from_args(args)
+    ob = obs.setup_from_args(args)
+    monitor = slo_mod.monitor_from_args(args)
+    if monitor is not None:
+        monitor.start(period=0.25)
+        if ob.exporter is not None:
+            ob.exporter.attach(slo=monitor)
+            print(f"[obs] slo objectives at {ob.exporter.url}/slo")
 
     graph = load_dataset(args.dataset, scale=args.scale, seed=args.seed)
     params = get_params(args, graph)
@@ -158,6 +169,8 @@ def main():
             max_batch=args.max_batch,
             sampled_budget=(args.sampled_budget
                             if 0 < args.sampled_budget < 1 else None))
+        if ob.exporter is not None and frontend.taillog is not None:
+            ob.exporter.attach(taillog=frontend.taillog)
         n_batches, query_s = run_queries(
             lambda ids: frontend.query(ids).logits)
         if args.update_edges > 0:
@@ -168,6 +181,10 @@ def main():
         n_parts = frontend.replicas[0].si.n_partitions
         build_s = frontend.replicas[0].build_seconds
         serve_stats = frontend.stats()
+        if args.slow_log and frontend.taillog is not None:
+            with open(args.slow_log, "w") as f:
+                json.dump(frontend.taillog.snapshot(), f, indent=1)
+            print(f"[serve] slow-request log → {args.slow_log}")
         frontend.close()
 
     out = {
@@ -182,6 +199,11 @@ def main():
         "updates": updates,
         "serve_stats": serve_stats,
     }
+    if monitor is not None:
+        monitor.stop()
+        out["slo"] = monitor.report()
+        # Raises SLOError under --strict-slo, mirroring --strict-compiles.
+        monitor.check(where="serve_gnn", hard_fail=args.strict_slo)
     snap = obs.finalize_from_args(args)
     if snap is not None:
         out["metrics"] = snap

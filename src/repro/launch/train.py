@@ -63,7 +63,16 @@ from repro.train.optimizer import Adam
 
 
 def run_gnn(args) -> dict:
-    obs.setup_from_args(args)
+    from repro.obs import slo as slo_mod
+
+    ob = obs.setup_from_args(args)
+    monitor = slo_mod.monitor_from_args(args)
+    if monitor is not None:
+        # p99_ms falls through to engine.step_ms when no serving tier
+        # publishes request latencies — the training-loop objective.
+        monitor.start(period=0.25)
+        if ob.exporter is not None:
+            ob.exporter.attach(slo=monitor)
     spec = DATASETS[args.dataset]
     g = load_dataset(args.dataset, scale=args.scale, seed=args.seed)
     common = dict(
@@ -132,6 +141,10 @@ def run_gnn(args) -> dict:
             extra["overlap_allreduce"] = args.overlap_allreduce
             if hasattr(planner, "per_shard_summary"):
                 extra["shards"] = planner.per_shard_summary()
+    if monitor is not None:
+        monitor.stop()
+        extra["slo"] = monitor.report()
+        monitor.check(where="train gnn", hard_fail=args.strict_slo)
     snap = obs.finalize_from_args(args)
     if snap is not None:
         extra["metrics"] = snap
@@ -273,6 +286,8 @@ def main():
     g.add_argument("--probe-rows", type=int, default=8, metavar="R",
                    help="row blocks per error probe")
     obs.add_cli_flags(g)
+    from repro.obs import slo as _slo
+    _slo.add_cli_flags(g)
     g.set_defaults(fn=run_gnn)
 
     l = sub.add_parser("lm")

@@ -27,16 +27,20 @@ in flight; it implies ``--metrics`` and enables the ledger.
 from __future__ import annotations
 
 from repro.obs.clock import GuardedClock, perf_now
+from repro.obs.context import TraceContext, new_trace
 from repro.obs.ledger import ApproxLedger, BudgetError
 from repro.obs.registry import MetricsRegistry, snapshot_delta
 from repro.obs.sentinel import CompileSentinel, RetraceError, jit_compiles
+from repro.obs.slo import SLOError, SLOMonitor
+from repro.obs.taillog import TailLog
 from repro.obs.trace import Tracer
 
 __all__ = [
     "ApproxLedger", "BudgetError", "CompileSentinel", "GuardedClock",
-    "MetricsRegistry", "Observability", "RetraceError", "Tracer",
-    "add_cli_flags", "configure", "finalize_from_args", "get_ledger",
-    "get_obs", "get_registry", "get_tracer", "jit_compiles", "perf_now",
+    "MetricsRegistry", "Observability", "RetraceError", "SLOError",
+    "SLOMonitor", "TailLog", "TraceContext", "Tracer", "add_cli_flags",
+    "configure", "finalize_from_args", "get_ledger", "get_obs",
+    "get_registry", "get_tracer", "jit_compiles", "new_trace", "perf_now",
     "reset", "setup_from_args", "snapshot_delta",
 ]
 

@@ -12,6 +12,12 @@ in flight (``--metrics-port``):
   the format spec (backslash, double-quote, newline).
 * ``GET /metrics.json`` — the raw registry snapshot + ledger snapshot as
   one JSON document (dashboards, tests, jq).
+* ``GET /slo`` — the attached :class:`~repro.obs.slo.SLOMonitor`'s
+  report: per-objective value/target/burn-rates/alert plus the
+  injected-violation self-test verdict (404 when none attached).
+* ``GET /debug/slow`` — the attached :class:`~repro.obs.taillog.TailLog`
+  reservoir: the K slowest requests with phase breakdowns and span trees
+  (404 when none attached).
 * ``GET /healthz`` — liveness.
 
 Built on :class:`http.server.ThreadingHTTPServer` (stdlib only), serving
@@ -78,47 +84,67 @@ def _fmt_value(v) -> str:
 
 def render_prometheus(snapshot: dict, ledger_snapshot: dict | None = None
                       ) -> str:
-    """Registry snapshot (+ ledger totals) → Prometheus text format."""
-    lines: list[str] = []
-    typed: set[str] = set()
+    """Registry snapshot (+ ledger totals) → Prometheus text format.
 
-    def emit_type(name: str, kind: str) -> None:
-        if name not in typed:
-            typed.add(name)
-            lines.append(f"# TYPE {name} {kind}")
-
+    Samples are grouped into metric FAMILIES keyed by the sanitized name:
+    the spec requires exactly one ``# TYPE`` line per family, emitted
+    before any of its samples, with all of the family's samples
+    contiguous. Sanitization can collide distinct registry names
+    (``a.b`` and ``a_b``) — a collision across instrument kinds demotes
+    the family to untyped (no TYPE line, still legal), and duplicate
+    ``(name, labels)`` samples within a family are dropped after the
+    first so a scrape never sees the same series twice. Histograms render
+    as summaries: ``quantile``-labeled samples on the base name plus
+    ``_sum``/``_count`` series per labelset (empty reservoirs quote their
+    quantiles as ``NaN``, the spec's empty-summary value).
+    """
     snap = snapshot or {"counters": {}, "gauges": {}, "histograms": {}}
+    # family name → {"kind": str, "samples": [(suffix, labels, value)]}
+    families: dict[str, dict] = {}
+
+    def family(pname: str, kind: str) -> dict:
+        fam = families.get(pname)
+        if fam is None:
+            fam = families[pname] = {"kind": kind, "samples": []}
+        elif fam["kind"] != kind:
+            fam["kind"] = "untyped"
+        return fam
+
     for key, val in sorted(snap.get("counters", {}).items()):
         name, labels = _parse_key(key)
-        pname = _prom_name(name)
-        emit_type(pname, "counter")
-        lines.append(f"{pname}{_fmt_labels(labels)} {_fmt_value(val)}")
+        family(_prom_name(name), "counter")["samples"].append(
+            ("", labels, _fmt_value(val)))
     for key, val in sorted(snap.get("gauges", {}).items()):
         name, labels = _parse_key(key)
-        pname = _prom_name(name)
-        emit_type(pname, "gauge")
-        lines.append(f"{pname}{_fmt_labels(labels)} {_fmt_value(val)}")
+        family(_prom_name(name), "gauge")["samples"].append(
+            ("", labels, _fmt_value(val)))
     for key, h in sorted(snap.get("histograms", {}).items()):
         name, labels = _parse_key(key)
-        pname = _prom_name(name)
-        emit_type(pname, "summary")
+        fam = family(_prom_name(name), "summary")
         for q, field in (("0.5", "p50"), ("0.95", "p95"), ("0.99", "p99")):
-            if h.get(field) is not None:
-                ql = dict(labels, quantile=q)
-                lines.append(
-                    f"{pname}{_fmt_labels(ql)} {_fmt_value(h[field])}")
-        lines.append(
-            f"{pname}_sum{_fmt_labels(labels)} {_fmt_value(h['sum'])}")
-        lines.append(
-            f"{pname}_count{_fmt_labels(labels)} {_fmt_value(h['count'])}")
+            fam["samples"].append(
+                ("", dict(labels, quantile=q), _fmt_value(h.get(field))))
+        fam["samples"].append(("_sum", labels, _fmt_value(h["sum"])))
+        fam["samples"].append(("_count", labels, _fmt_value(h["count"])))
 
     if ledger_snapshot is not None and ledger_snapshot.get("enabled"):
-        emit_type("rsc_ledger_epochs_total", "counter")
-        lines.append("rsc_ledger_epochs_total "
-                     f"{len(ledger_snapshot['epochs'])}")
-        emit_type("rsc_ledger_alloc_violations_total", "counter")
-        lines.append("rsc_ledger_alloc_violations_total "
-                     f"{ledger_snapshot['violations']}")
+        family("rsc_ledger_epochs_total", "counter")["samples"].append(
+            ("", {}, str(float(len(ledger_snapshot["epochs"])))))
+        family("rsc_ledger_alloc_violations_total", "counter")[
+            "samples"].append(
+            ("", {}, str(float(ledger_snapshot["violations"]))))
+
+    lines: list[str] = []
+    for pname, fam in families.items():
+        if fam["kind"] != "untyped":
+            lines.append(f"# TYPE {pname} {fam['kind']}")
+        seen: set[tuple[str, str]] = set()
+        for suffix, labels, val in fam["samples"]:
+            lbl = _fmt_labels(labels)
+            if (suffix, lbl) in seen:
+                continue
+            seen.add((suffix, lbl))
+            lines.append(f"{pname}{suffix}{lbl} {val}")
     return "\n".join(lines) + "\n"
 
 
@@ -150,6 +176,22 @@ class _Handler(BaseHTTPRequestHandler):
             }
             self._send(200, json.dumps(doc).encode("utf-8"),
                        "application/json")
+        elif path == "/slo":
+            slo = getattr(self.server, "slo", None)
+            if slo is None:
+                self._send(404, b"no slo monitor attached\n",
+                           "text/plain; charset=utf-8")
+                return
+            self._send(200, json.dumps(slo.report()).encode("utf-8"),
+                       "application/json")
+        elif path == "/debug/slow":
+            taillog = getattr(self.server, "taillog", None)
+            if taillog is None:
+                self._send(404, b"no tail log attached\n",
+                           "text/plain; charset=utf-8")
+                return
+            self._send(200, json.dumps(taillog.snapshot()).encode("utf-8"),
+                       "application/json")
         elif path == "/healthz":
             self._send(200, b"ok\n", "text/plain; charset=utf-8")
         else:
@@ -163,15 +205,25 @@ class MetricsExporter:
     """Background exposition server over a registry + ledger pair."""
 
     def __init__(self, port: int = 0, host: str = "127.0.0.1", *,
-                 registry=None, ledger=None):
+                 registry=None, ledger=None, slo=None, taillog=None):
         self._server = ThreadingHTTPServer((host, port), _Handler)
         self._server.daemon_threads = True
         self._server.registry = registry       # type: ignore[attr-defined]
         self._server.ledger = ledger           # type: ignore[attr-defined]
+        self._server.slo = slo                 # type: ignore[attr-defined]
+        self._server.taillog = taillog         # type: ignore[attr-defined]
         self._thread = threading.Thread(
             target=self._server.serve_forever, daemon=True,
             name="metrics-exporter")
         self._thread.start()
+
+    def attach(self, *, slo=None, taillog=None) -> None:
+        """Wire an SLO monitor and/or tail log in after construction
+        (drivers build them once the frontend exists)."""
+        if slo is not None:
+            self._server.slo = slo             # type: ignore[attr-defined]
+        if taillog is not None:
+            self._server.taillog = taillog     # type: ignore[attr-defined]
 
     @property
     def port(self) -> int:

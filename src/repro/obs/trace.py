@@ -14,6 +14,17 @@ Two exports:
   ``chrome://tracing`` or https://ui.perfetto.dev): spans become ``"X"``
   complete events on per-thread tracks, instants become ``"i"`` events.
 
+**Causal arcs across threads:** ``span_in(ctx, ...)`` opens a span bound
+to an explicit :class:`~repro.obs.context.TraceContext`, and plain
+``span(...)`` automatically joins the thread's *current* context (see
+``repro.obs.context``), so a request's spans share one ``trace`` id no
+matter which thread records them. ``span_at(ctx, name, t0, t1)`` records
+an already-elapsed interval retroactively (the dispatcher attributes a
+request's queue wait after picking it up). At export time the
+trace-annotated spans of each multi-thread trace are stitched into Chrome
+**flow events** (``ph: "s"/"t"/"f"``) so Perfetto draws one arrowed arc
+per request across the thread tracks.
+
 Timestamps are monotonic (``perf_counter``) microseconds from the
 tracer's construction. The event buffer is bounded (``max_events``);
 overflow drops newest events and counts them in ``dropped`` so a
@@ -32,6 +43,7 @@ import atexit
 import json
 import threading
 
+from repro.obs import context as trace_context
 from repro.obs.clock import perf_now
 
 
@@ -54,12 +66,14 @@ _NULL_SPAN = _NullSpan()
 
 
 class _Span:
-    __slots__ = ("_tracer", "name", "args", "_t0", "_depth", "_parent")
+    __slots__ = ("_tracer", "name", "args", "_t0", "_depth", "_parent",
+                 "_ctx")
 
-    def __init__(self, tracer: "Tracer", name: str, args: dict):
+    def __init__(self, tracer: "Tracer", name: str, args: dict, ctx=None):
         self._tracer = tracer
         self.name = name
         self.args = args
+        self._ctx = ctx
 
     def set(self, **args) -> None:
         """Attach result attributes discovered while the span is open."""
@@ -70,13 +84,21 @@ class _Span:
         self._parent = stack[-1] if stack else None
         self._depth = len(stack)
         stack.append(self.name)
+        if self._ctx is None:
+            # Plain span() under an active context joins it as a child —
+            # nested same-thread instrumentation needs no call changes.
+            cur = trace_context.current()
+            if cur is not None:
+                self._ctx = cur.child()
+        if self._ctx is not None:
+            trace_context._push(self._ctx)
         self._t0 = perf_now()
         return self
 
     def __exit__(self, *exc):
         t1 = perf_now()
         self._tracer._stack().pop()
-        self._tracer._record({
+        ev = {
             "kind": "span",
             "name": self.name,
             "ts_us": round((self._t0 - self._tracer._origin) * 1e6, 1),
@@ -85,7 +107,13 @@ class _Span:
             "parent": self._parent,
             "tid": self._tracer._tid(),
             "args": self.args,
-        })
+        }
+        if self._ctx is not None:
+            trace_context._pop()
+            ev["trace"] = self._ctx.trace_id
+            ev["span"] = self._ctx.span_id
+            ev["parent_span"] = self._ctx.parent_id
+        self._tracer._record(ev)
         return False
 
 
@@ -135,6 +163,40 @@ class Tracer:
             return _NULL_SPAN
         return _Span(self, name, args)
 
+    def span_in(self, ctx, name: str, **args):
+        """Open a span bound to an explicit :class:`TraceContext` (the
+        cross-thread form of ``span``): the recorded event carries the
+        trace/span/parent ids and the context becomes current for the
+        span's duration, so nested plain spans join the same trace.
+        ``ctx=None`` degrades to ``span(name, ...)``."""
+        if not self.enabled:
+            return _NULL_SPAN
+        return _Span(self, name, args,
+                     ctx=ctx.child() if ctx is not None else None)
+
+    def span_at(self, ctx, name: str, t0: float, t1: float, **args) -> None:
+        """Record an already-elapsed ``[t0, t1]`` interval (perf_counter
+        seconds) as a completed span on the calling thread — used to
+        attribute time retroactively (queue wait, executor handoff)."""
+        if not self.enabled:
+            return
+        ev = {
+            "kind": "span",
+            "name": name,
+            "ts_us": round((t0 - self._origin) * 1e6, 1),
+            "dur_us": round(max(t1 - t0, 0.0) * 1e6, 1),
+            "depth": 0,
+            "parent": None,
+            "tid": self._tid(),
+            "args": args,
+        }
+        if ctx is not None:
+            c = ctx.child()
+            ev["trace"] = c.trace_id
+            ev["span"] = c.span_id
+            ev["parent_span"] = c.parent_id
+        self._record(ev)
+
     def instant(self, name: str, **args) -> None:
         if not self.enabled:
             return
@@ -154,6 +216,16 @@ class Tracer:
     def span_names(self) -> set[str]:
         with self._lock:
             return {ev["name"] for ev in self._events}
+
+    def spans_by_trace(self) -> dict[str, list[dict]]:
+        """Context-bound spans grouped by trace id, time-ordered."""
+        out: dict[str, list[dict]] = {}
+        for ev in self.snapshot():
+            if ev["kind"] == "span" and ev.get("trace"):
+                out.setdefault(ev["trace"], []).append(ev)
+        for sp in out.values():
+            sp.sort(key=lambda e: (e["ts_us"], e["dur_us"]))
+        return out
 
     def reset(self) -> None:
         with self._lock:
@@ -225,6 +297,7 @@ class Tracer:
              "args": {"name": name}}
             for tid, name in sorted(tid_names.items())
         ]
+        by_trace: dict[str, list[dict]] = {}
         for ev in events:
             if ev["kind"] == "span":
                 trace.append({
@@ -233,12 +306,32 @@ class Tracer:
                     "ts": ev["ts_us"], "dur": ev["dur_us"],
                     "args": ev["args"],
                 })
+                if ev.get("trace"):
+                    by_trace.setdefault(ev["trace"], []).append(ev)
             else:
                 trace.append({
                     "ph": "i", "name": ev["name"], "cat": "repro",
                     "pid": 0, "tid": ev["tid"], "ts": ev["ts_us"],
                     "s": "t", "args": ev["args"],
                 })
+        # Flow events: one causal arc per multi-thread trace. The arc
+        # enters each span just inside its start so the viewer binds it
+        # to the enclosing slice on that thread's track.
+        for trace_id, sp in sorted(by_trace.items()):
+            if len({e["tid"] for e in sp}) < 2:
+                continue
+            sp.sort(key=lambda e: (e["ts_us"], e["dur_us"]))
+            last = len(sp) - 1
+            for i, e in enumerate(sp):
+                ph = "s" if i == 0 else ("f" if i == last else "t")
+                rec = {
+                    "ph": ph, "name": "request", "cat": "flow",
+                    "id": trace_id, "pid": 0, "tid": e["tid"],
+                    "ts": round(e["ts_us"] + min(e["dur_us"], 1.0) / 2, 1),
+                }
+                if ph == "f":
+                    rec["bp"] = "e"
+                trace.append(rec)
         with open(path, "w") as f:
             json.dump({"traceEvents": trace, "displayTimeUnit": "ms",
                        "otherData": {"dropped_events": self.dropped}}, f)

@@ -28,6 +28,7 @@ import numpy as np
 
 from repro import obs
 from repro.models.gnn.common import GraphOperands
+from repro.obs import context as trace_context
 from repro.pipeline.partition import HostSubgraph, SubgraphPool
 
 _END = object()
@@ -93,7 +94,7 @@ class Prefetcher:
         self._resident = resident
 
     # ------------------------------------------------------------------
-    def _get(self, sid):
+    def _get(self, sid, ctx: trace_context.TraceContext | None = None):
         reg = obs.get_registry()
         if self._cache is not None and sid in self._cache:
             self._cache.move_to_end(sid)
@@ -102,8 +103,9 @@ class Prefetcher:
         t0 = time.perf_counter()
         # The span runs on the prefetch thread: in the Chrome trace the
         # upload track overlaps the main thread's device_step track, which
-        # is exactly the double-buffering claim made visible.
-        with obs.get_tracer().span("upload", sub=str(sid)):
+        # is exactly the double-buffering claim made visible. ``ctx`` links
+        # it to the same trace as the step that will consume this batch.
+        with obs.get_tracer().span_in(ctx, "upload", sub=str(sid)):
             if self._fetch is not None:
                 ops = self._fetch(sid)
             else:
@@ -124,9 +126,27 @@ class Prefetcher:
         return ops
 
     def __iter__(self) -> Iterator[tuple[int, GraphOperands]]:
+        # Per-batch trace contexts: each upload gets a child of whatever
+        # trace the consumer was in at iteration start (or a fresh root),
+        # and the SAME context is left as the thread's pending handoff just
+        # before the yield — the engine's step loop adopts it, so a step's
+        # span and its prefetch upload span share one trace id even though
+        # they ran on different threads.
+        tracing = obs.get_tracer().enabled
+        parent = trace_context.current() if tracing else None
+
+        def item_ctx():
+            if not tracing:
+                return None
+            return (parent.child() if parent is not None
+                    else trace_context.new_trace())
+
         if not self.enabled:
             for sid in self.schedule:
-                yield sid, self._get(sid)
+                ctx = item_ctx()
+                ops = self._get(sid, ctx=ctx)
+                trace_context.set_pending(ctx)
+                yield sid, ops
             return
 
         q: queue.Queue = queue.Queue(maxsize=self.depth)
@@ -147,7 +167,8 @@ class Prefetcher:
                 for sid in self.schedule:
                     if stop.is_set():
                         return
-                    if not put((sid, self._get(sid))):
+                    ctx = item_ctx()
+                    if not put((sid, self._get(sid, ctx=ctx), ctx)):
                         return
             except BaseException as e:  # propagate to the consumer
                 put(e)
@@ -172,7 +193,9 @@ class Prefetcher:
                     break
                 if isinstance(item, BaseException):
                     raise item
-                yield item
+                sid, ops, ctx = item
+                trace_context.set_pending(ctx)
+                yield sid, ops
         finally:
             # Consumer done or aborted mid-epoch: unblock the worker and
             # drop any in-flight uploads so the thread exits promptly.

@@ -35,6 +35,7 @@ import numpy as np
 
 from repro import obs
 from repro.core.cache import PlanCache
+from repro.obs import context as trace_context
 from repro.core.schedule import RSCSchedule
 from repro.obs.sentinel import CompileSentinel, jit_compiles  # noqa: F401
                                           # (jit_compiles re-exported: it
@@ -607,10 +608,18 @@ class Engine:
                 # prefetcher-starved time (~0 when the upload thread keeps
                 # up, the whole upload latency when it does not).
                 t_fetch = time.perf_counter()
+                if tracer.enabled:
+                    trace_context.take_pending()   # drop any stale baton
                 try:
                     bidx, (tag, ops) = next(batch_it)
                 except StopIteration:
                     break
+                # The prefetcher leaves the batch's trace context as this
+                # thread's pending handoff just before yielding; adopting
+                # it here links the step span to the upload span that
+                # produced its operands — one trace across both threads.
+                step_ctx = (trace_context.take_pending()
+                            if tracer.enabled else None)
                 reg.observe("engine.sample_ms",
                             (time.perf_counter() - t_fetch) * 1e3)
                 key, sub = jax.random.split(key)
@@ -621,8 +630,8 @@ class Engine:
                             and (approx if cfg.switching else True))
                 mode = "rsc" if use_rsc else "exact"
                 t0 = time.perf_counter()
-                with tracer.span("step", step=gstep, epoch=epoch,
-                                 mode=mode) as sp:
+                with tracer.span_in(step_ctx, "step", step=gstep,
+                                    epoch=epoch, mode=mode) as sp:
                     if use_rsc:
                         with tracer.span("plan"):
                             plans = self.planner.plans_for(

@@ -1,0 +1,623 @@
+"""Request-scoped causal tracing, tail-latency attribution and SLO
+burn-rate monitoring: trace-context propagation across the serving tier's
+threads (span-union coverage of a query's wall-clock via the JSONL
+export), per-request phase breakdowns, deadline drops at dispatch, the
+slowest-K tail reservoir + ``/debug/slow``, SLO burn-rate alerting +
+``/slo``, Prometheus text-format conformance under a strict scrape
+parser, and label-cap/exporter behavior under concurrency."""
+import json
+import re
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import jax
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.graphs.synthetic import sbm_graph
+from repro.infer import ServeFrontend, StreamConfig
+from repro.models.gnn import MODELS
+from repro.obs import context as trace_context
+from repro.obs.context import TraceContext, new_trace
+from repro.obs.export import MetricsExporter, render_prometheus
+from repro.obs.slo import SLOError, SLOMonitor, parse_targets
+from repro.obs.taillog import TailLog
+
+
+@pytest.fixture(autouse=True)
+def _fresh_obs():
+    obs.reset()
+    yield
+    obs.reset()
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return sbm_graph(n_nodes=300, n_clusters=4, avg_degree=8, feat_dim=8,
+                     seed=0)
+
+
+@pytest.fixture(scope="module")
+def params(graph):
+    return MODELS["gcn"].init(jax.random.PRNGKey(0),
+                              graph.features.shape[1], 16,
+                              graph.num_classes, 2, False)
+
+
+CFG = StreamConfig(block=32, n_partitions=2, memory_budget_mb=None)
+
+
+# ----------------------------------------------------------- trace context
+
+def test_trace_context_ids_and_children():
+    a, b = new_trace(), new_trace()
+    assert a.trace_id != b.trace_id
+    assert a.span_id == a.trace_id and a.parent_id is None
+    c = a.child()
+    assert c.trace_id == a.trace_id
+    assert c.parent_id == a.span_id and c.span_id != a.span_id
+
+
+def test_current_context_is_thread_local():
+    ctx = new_trace()
+    seen = []
+    with trace_context.use(ctx):
+        assert trace_context.current() is ctx
+        t = threading.Thread(
+            target=lambda: seen.append(trace_context.current()))
+        t.start()
+        t.join()
+    assert seen == [None]               # other thread never saw it
+    assert trace_context.current() is None
+    with trace_context.use(None):       # None is a no-op scope
+        assert trace_context.current() is None
+
+
+def test_pending_handoff_is_take_once():
+    ctx = new_trace()
+    trace_context.set_pending(ctx)
+    assert trace_context.take_pending() is ctx
+    assert trace_context.take_pending() is None     # cleared on read
+
+
+def test_span_auto_joins_current_context():
+    ob = obs.reset(trace=True)
+    ctx = new_trace()
+    with trace_context.use(ctx):
+        with ob.tracer.span("inner"):
+            pass
+    with ob.tracer.span("outside"):
+        pass
+    evs = {e["name"]: e for e in ob.tracer.snapshot()}
+    assert evs["inner"]["trace"] == ctx.trace_id
+    assert evs["inner"]["parent_span"] == ctx.span_id
+    assert "trace" not in evs["outside"]
+
+
+def test_span_in_nests_and_span_at_backfills():
+    ob = obs.reset(trace=True)
+    ctx = new_trace()
+    with ob.tracer.span_in(ctx, "outer"):
+        with ob.tracer.span("nested"):
+            pass
+    t0 = time.perf_counter() - 0.010
+    ob.tracer.span_at(ctx, "retro", t0, t0 + 0.005, k="v")
+    evs = {e["name"]: e for e in ob.tracer.snapshot()}
+    assert evs["outer"]["trace"] == ctx.trace_id
+    assert evs["nested"]["trace"] == ctx.trace_id
+    assert evs["nested"]["parent_span"] == evs["outer"]["span"]
+    retro = evs["retro"]
+    assert retro["trace"] == ctx.trace_id
+    assert 4500 < retro["dur_us"] < 5500 and retro["args"] == {"k": "v"}
+
+
+def test_chrome_flow_events_only_for_multithread_traces(tmp_path):
+    ob = obs.reset(trace=True)
+    multi, single = new_trace(), new_trace()
+    with ob.tracer.span_in(single, "solo"):
+        pass
+    with ob.tracer.span_in(multi, "here"):
+        pass
+    t = threading.Thread(
+        target=lambda: ob.tracer.span_at(
+            multi, "there", time.perf_counter() - 0.001,
+            time.perf_counter()))
+    t.start()
+    t.join()
+    path = tmp_path / "trace.json"
+    ob.tracer.export_chrome(path)
+    doc = json.loads(path.read_text())
+    flows = [e for e in doc["traceEvents"] if e.get("cat") == "flow"]
+    assert {e["id"] for e in flows} == {multi.trace_id}
+    assert sorted(e["ph"] for e in flows) == ["f", "s"]
+    assert [e for e in flows if e["ph"] == "f"][0]["bp"] == "e"
+
+
+# ------------------------------------------------- frontend: spans + phases
+
+def _union_coverage(spans, t0, t1):
+    ivs = sorted((max(e["ts_us"], t0), min(e["ts_us"] + e["dur_us"], t1))
+                 for e in spans)
+    cov = 0.0
+    cur0 = cur1 = None
+    for a, b in ivs:
+        if b <= a:
+            continue
+        if cur1 is None or a > cur1:
+            if cur1 is not None:
+                cov += cur1 - cur0
+            cur0, cur1 = a, b
+        else:
+            cur1 = max(cur1, b)
+    if cur1 is not None:
+        cov += cur1 - cur0
+    return cov / max(t1 - t0, 1e-9)
+
+
+def test_frontend_query_trace_covers_wallclock(graph, params, tmp_path):
+    """Acceptance: one trace id per query whose span union covers ≥ 90%
+    of the request wall-clock across ≥ 3 threads — checked from the
+    JSONL export, not tracer internals."""
+    obs.reset(metrics=True, trace=True)
+    with ServeFrontend(graph, "gcn", params, CFG, replicas=2,
+                       max_batch=64) as fe:
+        results = [fe.query(np.arange(i, graph.n, 5)) for i in range(6)]
+    path = tmp_path / "spans.jsonl"
+    obs.get_tracer().write_jsonl(path)
+    events = obs.get_tracer().read_jsonl(path)
+    by_trace = {}
+    for e in events:
+        if e.get("kind") == "span" and e.get("trace"):
+            by_trace.setdefault(e["trace"], []).append(e)
+    for res in results:
+        assert res.trace_id in by_trace
+        spans = by_trace[res.trace_id]
+        req = [e for e in spans if e["name"] == "request"]
+        assert len(req) == 1
+        r = req[0]
+        others = [e for e in spans if e["name"] != "request"]
+        cov = _union_coverage(others, r["ts_us"],
+                              r["ts_us"] + r["dur_us"])
+        assert cov >= 0.9, f"span coverage {cov:.3f} < 0.9"
+        assert len({e["tid"] for e in spans}) >= 3
+        names = {e["name"] for e in spans}
+        assert {"queue", "batch_form", "answer", "wake"} <= names
+
+
+def test_query_result_phase_breakdown(graph, params):
+    obs.reset(metrics=True, trace=True)
+    with ServeFrontend(graph, "gcn", params, CFG, replicas=1) as fe:
+        res = fe.query(np.arange(0, graph.n, 3))
+    ph = res.phases
+    assert ph is not None and res.trace_id
+    for key in ("queue_ms", "batch_ms", "handoff_ms", "pin_ms",
+                "gather_ms", "answer_ms", "total_ms", "wake_ms"):
+        assert key in ph and ph[key] >= 0.0
+    # the serving-side phases tile the serving-side total
+    assert (ph["queue_ms"] + ph["batch_ms"] + ph["handoff_ms"]
+            + ph["answer_ms"]) == pytest.approx(ph["total_ms"], rel=0.05)
+    assert ph["pin_ms"] + ph["gather_ms"] <= ph["answer_ms"] + 0.01
+    # phases ride along even with tracing off (attribution is cheap)
+    obs.reset(metrics=True)
+    with ServeFrontend(graph, "gcn", params, CFG, replicas=1) as fe:
+        res = fe.query(np.arange(8))
+    assert res.trace_id is None and res.phases is not None
+
+
+def test_update_trace_links_submit_to_applier(graph, params):
+    obs.reset(metrics=True, trace=True)
+    with ServeFrontend(graph, "gcn", params, CFG, replicas=2) as fe:
+        hub = int(np.argmax(graph.adj.row_nnz()))
+        nbr = int(graph.adj.col[graph.adj.rowptr[hub]])
+        fe.update_edges(remove=[(hub, nbr)], wait=True)
+    tracer = obs.get_tracer()
+    evs = [e for e in tracer.snapshot() if e["kind"] == "span"]
+    submits = [e for e in evs if e["name"] == "update_submit"]
+    assert len(submits) == 1
+    tid_ = submits[0]["trace"]
+    applies = [e for e in evs if e["name"] == "apply_update"
+               and e.get("trace") == tid_]
+    assert len(applies) == 2            # one per replica, same trace
+    # nested rebuild instrumentation auto-joins via the current context
+    nested = [e for e in evs if e.get("trace") == tid_
+              and e["name"] not in ("update_submit", "apply_update")]
+    assert nested, "rebuild spans did not join the update trace"
+    assert len({e["tid"] for e in evs if e.get("trace") == tid_}) >= 2
+
+
+def test_deadline_dropped_requests_skip_snapshot_read(graph, params):
+    obs.reset(metrics=True)
+    with ServeFrontend(graph, "gcn", params, CFG, replicas=1) as fe:
+        entered, release = threading.Event(), threading.Event()
+        orig = fe._pick_replica
+
+        def stalled():
+            entered.set()
+            assert release.wait(30)
+            return orig()
+
+        fe._pick_replica = stalled
+        a = fe.submit(np.arange(4))         # occupies the dispatcher
+        assert entered.wait(10)
+        b = fe.submit(np.arange(4, 8), timeout=0.02)
+        time.sleep(0.1)                     # let b's deadline lapse
+        release.set()
+        assert a.wait(10).logits.shape[0] == 4
+        with pytest.raises(TimeoutError, match="deadline exceeded"):
+            b.wait(10)
+    snap = obs.get_registry().snapshot()
+    assert snap["counters"]["frontend.deadline_dropped"] == 1
+    assert snap["counters"]["frontend.requests"] == 2
+
+
+# ------------------------------------------------------- tail reservoir
+
+def test_taillog_keeps_slowest_k():
+    tl = TailLog(k=3)
+    for i, ms in enumerate([5.0, 1.0, 9.0, 2.0, 7.0, 0.5]):
+        tl.offer(ms, {"i": i})
+    assert len(tl) == 3 and tl.offered == 6
+    snap = tl.snapshot()
+    assert [r["total_ms"] for r in snap["slow"]] == [9.0, 7.0, 5.0]
+    assert snap["kept"] == 3 and snap["offered"] == 6
+    assert tl.threshold_ms() == 5.0
+    assert not tl.offer(4.0, {})        # too fast to enter
+    assert tl.offer(6.0, {})            # evicts the 5.0
+    tl.clear()
+    assert len(tl) == 0 and tl.threshold_ms() is None
+
+
+def test_frontend_offers_answered_requests_to_taillog(graph, params):
+    obs.reset(metrics=True)
+    with ServeFrontend(graph, "gcn", params, CFG, replicas=1,
+                       slow_k=4) as fe:
+        for i in range(8):
+            fe.query(np.arange(i, graph.n, 11))
+        snap = fe.taillog.snapshot()
+    assert snap["offered"] == 8 and snap["kept"] == 4
+    rec = snap["slow"][0]
+    assert {"replica", "phases", "staleness", "n_ids"} <= set(rec)
+    assert rec["phases"]["total_ms"] == pytest.approx(rec["total_ms"],
+                                                      abs=0.01)
+
+
+def test_debug_slow_endpoint():
+    reg = obs.reset(metrics=True).registry
+    with MetricsExporter(port=0, registry=reg) as ex:
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(f"{ex.url}/debug/slow")
+        assert ei.value.code == 404
+        tl = TailLog(k=2)
+        tl.offer(3.0, {"trace_id": "t1"})
+        ex.attach(taillog=tl)
+        with urllib.request.urlopen(f"{ex.url}/debug/slow") as r:
+            doc = json.loads(r.read())
+        assert doc["kept"] == 1
+        assert doc["slow"][0]["trace_id"] == "t1"
+
+
+# ------------------------------------------------------------------- SLO
+
+_SNAP_BAD = {"counters": {}, "gauges": {},
+             "histograms": {"frontend.request_ms":
+                            {"count": 10, "sum": 500.0, "p99": 50.0}}}
+_SNAP_GOOD = {"counters": {}, "gauges": {},
+              "histograms": {"frontend.request_ms":
+                             {"count": 10, "sum": 5.0, "p99": 0.5}}}
+
+
+def test_slo_burn_rates_and_alerts():
+    mon = SLOMonitor({"p99_ms": 5.0}, windows=(10.0, 60.0),
+                     budget_frac=0.05)
+    for i in range(12):
+        mon.tick(snapshot=_SNAP_BAD, now=float(i * 5))
+    burn = mon.burn_rates("p99_ms", now=55.0)
+    assert burn["10s"] == pytest.approx(20.0)     # 100% violating / 5%
+    assert burn["60s"] == pytest.approx(20.0)
+    assert mon.alerts(now=55.0) == ["p99_ms"]
+    # recovery: fresh good ticks clear the short window first
+    for i in range(12, 16):
+        mon.tick(snapshot=_SNAP_GOOD, now=float(i * 5))
+    assert mon.burn_rates("p99_ms", now=77.0)["10s"] == 0.0
+    assert mon.alerts(now=77.0) == []             # fast window vetoes
+
+
+def test_slo_availability_and_no_data():
+    mon = SLOMonitor({"availability": 0.99, "staleness": 3.0})
+    ev = mon.tick(snapshot={"counters": {}, "gauges": {},
+                            "histograms": {}}, now=0.0)
+    assert ev["availability"]["no_data"] and ev["staleness"]["no_data"]
+    snap = {"counters": {"frontend.requests": 100.0,
+                         "frontend.deadline_dropped": 3.0,
+                         "frontend.failed": 1.0},
+            "gauges": {"frontend.staleness{replica=r0}": 1.0,
+                       "frontend.staleness{replica=r1}": 5.0},
+            "histograms": {}}
+    ev = mon.tick(snapshot=snap, now=1.0)
+    assert ev["availability"]["value"] == pytest.approx(0.96)
+    assert not ev["availability"]["ok"]
+    assert ev["staleness"]["value"] == 5.0        # max over labels
+    assert not ev["staleness"]["ok"]
+
+
+def test_slo_self_test_and_strict_check():
+    st = SLOMonitor.self_test()
+    assert st["pass"] and st["alerted"] == ["p99_ms"]
+    mon = SLOMonitor({"p99_ms": 5.0}, windows=(5.0, 10.0))
+    for _ in range(6):                  # real clock: check() reads now()
+        mon.tick(snapshot=_SNAP_BAD)
+    assert mon.check() == ["p99_ms"]              # soft: just reports
+    with pytest.raises(SLOError, match="p99_ms"):
+        mon.check(where="test", hard_fail=True)
+
+
+def test_slo_publishes_gauges_and_report():
+    reg = obs.reset(metrics=True).registry
+    mon = SLOMonitor({"p99_ms": 5.0}, registry=reg, windows=(5.0, 10.0))
+    for i in range(6):
+        mon.tick(snapshot=_SNAP_BAD, now=float(i * 2))
+    gauges = reg.snapshot()["gauges"]
+    assert gauges["rsc.slo.value{slo=p99_ms}"] == 50.0
+    assert gauges["rsc.slo.target{slo=p99_ms}"] == 5.0
+    assert gauges["rsc.slo.ok{slo=p99_ms}"] == 0.0
+    assert gauges["rsc.slo.alert{slo=p99_ms}"] == 1.0
+    assert gauges["rsc.slo.burn_rate{slo=p99_ms,window=5s}"] > 1.0
+    rep = mon.report(snapshot=_SNAP_BAD)
+    assert rep["objectives"]["p99_ms"]["alert"]
+    assert rep["self_test"]["pass"]
+
+
+def test_slo_parse_targets_and_cli_validation():
+    assert parse_targets(["p99_ms=50", "availability=0.99"]) == {
+        "p99_ms": 50.0, "availability": 0.99}
+    with pytest.raises(ValueError, match="KEY=TARGET"):
+        parse_targets(["nope=1"])
+    with pytest.raises(ValueError):
+        parse_targets(["p99_ms"])
+    import argparse
+
+    from repro.obs import slo as slo_mod
+    ap = argparse.ArgumentParser()
+    slo_mod.add_cli_flags(ap)
+    args = ap.parse_args(["--slo", "p99_ms=50", "--strict-slo"])
+    mon = slo_mod.monitor_from_args(args)
+    assert [o.key for o in mon.objectives] == ["p99_ms"]
+    args = ap.parse_args(["--strict-slo"])
+    with pytest.raises(SystemExit, match="strict-slo"):
+        slo_mod.monitor_from_args(args)
+    assert slo_mod.monitor_from_args(ap.parse_args([])) is None
+
+
+def test_slo_endpoint(graph, params):
+    reg = obs.reset(metrics=True).registry
+    with MetricsExporter(port=0, registry=reg) as ex:
+        try:
+            urllib.request.urlopen(f"{ex.url}/slo")
+            assert False, "expected 404 with no monitor attached"
+        except urllib.error.HTTPError as e:
+            assert e.code == 404
+        mon = SLOMonitor({"staleness": 100.0}, registry=reg)
+        ex.attach(slo=mon)
+        with urllib.request.urlopen(f"{ex.url}/slo") as r:
+            doc = json.loads(r.read())
+        assert "staleness" in doc["objectives"]
+        assert doc["self_test"]["pass"] is True
+
+
+# ----------------------------------------- Prometheus text conformance
+
+_PROM_NAME = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+_SAMPLE = re.compile(
+    r'^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)'
+    r'(\{(?P<labels>(?:[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\]|\\.)*",?)*)\})?'
+    r' (?P<value>\S+)$')
+
+
+def _scrape_parse(text):
+    """Strict text-format 0.0.4 parser: returns {family: (kind, samples)}
+    and asserts the structural invariants a real scraper relies on."""
+    families: dict = {}
+    order: list = []
+    current = None
+    assert text.endswith("\n")
+    for line in text.rstrip("\n").split("\n"):
+        if line.startswith("#"):
+            m = re.match(r"^# TYPE ([a-zA-Z_:][a-zA-Z0-9_:]*) "
+                         r"(counter|gauge|summary|histogram|untyped)$",
+                         line)
+            assert m, f"malformed TYPE line: {line!r}"
+            fam, kind = m.group(1), m.group(2)
+            assert fam not in families, f"duplicate TYPE for {fam}"
+            families[fam] = (kind, [])
+            order.append(fam)
+            current = fam
+            continue
+        m = _SAMPLE.match(line)
+        assert m, f"malformed sample line: {line!r}"
+        name, value = m.group("name"), m.group("value")
+        assert _PROM_NAME.match(name)
+        float(value)                      # parses (NaN allowed)
+        fam = None
+        for suffix in ("", "_sum", "_count"):
+            if suffix and not name.endswith(suffix):
+                continue
+            cand = name[: -len(suffix)] if suffix else name
+            if cand in families:
+                fam = cand
+                break
+        if fam is None:                   # untyped family: samples only
+            families.setdefault(name, ("untyped-implicit", []))
+            fam = name
+            if not order or order[-1] != name:
+                order.append(name)
+        else:
+            # contiguity: typed samples follow their own TYPE line
+            assert current == fam or families[fam][0].startswith(
+                "untyped"), f"sample {name} outside its family block"
+        labels = {}
+        for lm in re.finditer(r'([a-zA-Z_][a-zA-Z0-9_]*)='
+                              r'"((?:[^"\\]|\\.)*)"',
+                              m.group("labels") or ""):
+            labels[lm.group(1)] = lm.group(2)
+        key = (name, tuple(sorted(labels.items())))
+        assert key not in families[fam][1], f"duplicate sample {key}"
+        families[fam][1].append(key)
+    return families
+
+
+def test_prometheus_render_conformance():
+    reg = obs.reset(metrics=True).registry
+    reg.counter("frontend.requests", 3.0)
+    reg.counter("frontend.requests", 2.0)
+    reg.gauge("rsc.slo.ok", 1.0, slo="p99_ms")
+    reg.gauge("rsc.slo.ok", 0.0, slo="staleness")
+    # label value needing escapes
+    reg.gauge("weird.gauge", 1.0, who='he said "hi"\nback\\slash')
+    for v in (1.0, 2.0, 3.0):
+        reg.observe("frontend.request_ms", v, replica="r0")
+    body = render_prometheus(reg.snapshot(),
+                             {"enabled": True, "epochs": [1],
+                              "violations": 0})
+    fams = _scrape_parse(body)
+    assert fams["frontend_requests"][0] == "counter"
+    assert fams["rsc_slo_ok"][0] == "gauge"
+    assert fams["frontend_request_ms"][0] == "summary"
+    # summary = 3 quantiles + _sum + _count per labelset
+    names = [n for n, _ in fams["frontend_request_ms"][1]]
+    assert names.count("frontend_request_ms") == 3
+    assert "frontend_request_ms_sum" in names
+    assert "frontend_request_ms_count" in names
+    assert fams["rsc_ledger_epochs_total"][0] == "counter"
+    # escaping survived the round trip
+    esc = [lbls for n, lbls in fams["weird_gauge"][1]][0]
+    assert dict(esc)["who"] == 'he said \\"hi\\"\\nback\\\\slash'
+
+
+def test_prometheus_sanitization_collision_demotes_to_untyped():
+    """Distinct registry names that sanitize to the SAME Prometheus name
+    across kinds must yield ONE family with no TYPE line (untyped) and
+    deduped samples — never two TYPE lines for one name."""
+    snap = {"counters": {"a.b": 1.0},
+            "gauges": {"a_b": 2.0},
+            "histograms": {}}
+    body = render_prometheus(snap)
+    assert "# TYPE a_b" not in body
+    assert body.count("a_b ") == 1      # duplicate sample dropped
+    _scrape_parse(body)                  # still structurally valid
+
+
+def test_label_cap_concurrent_replica_churn():
+    from repro.infer.frontend import LabelCap
+
+    cap = LabelCap(limit=8)
+    values = [f"r{i}" for i in range(32)]
+    results: dict = {}
+    lock = threading.Lock()
+
+    def churn(seed):
+        rng = np.random.default_rng(seed)
+        for v in rng.permutation(values):
+            out = cap(str(v))
+            with lock:
+                results.setdefault(str(v), set()).add(out)
+
+    threads = [threading.Thread(target=churn, args=(s,))
+               for s in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    # Each value maps to exactly ONE output forever (no racing flip-flop)
+    assert all(len(outs) == 1 for outs in results.values())
+    passed = {v for v, outs in results.items() if outs == {v}}
+    assert len(passed) <= 8             # cap held under contention
+    assert all(outs == {"other"} for v, outs in results.items()
+               if v not in passed)
+
+
+def test_exporter_concurrent_scrapes_during_update_drain(graph, params):
+    """Satellite: /metrics and /metrics.json stay valid while a live
+    update_edges drain mutates the registry from the applier thread."""
+    reg = obs.reset(metrics=True).registry
+    with ServeFrontend(graph, "gcn", params, CFG, replicas=2) as fe, \
+            MetricsExporter(port=0, registry=reg) as ex:
+        ex.attach(taillog=fe.taillog)
+        stop = threading.Event()
+        errors: list = []
+
+        def scrape():
+            while not stop.is_set():
+                try:
+                    with urllib.request.urlopen(
+                            f"{ex.url}/metrics", timeout=5) as r:
+                        _scrape_parse(r.read().decode())
+                    with urllib.request.urlopen(
+                            f"{ex.url}/metrics.json", timeout=5) as r:
+                        json.loads(r.read())
+                except BaseException as e:   # pragma: no cover
+                    errors.append(e)
+                    return
+
+        scrapers = [threading.Thread(target=scrape) for _ in range(3)]
+        for t in scrapers:
+            t.start()
+        hub = int(np.argmax(graph.adj.row_nnz()))
+        for off in range(3):
+            nbr = int(graph.adj.col[graph.adj.rowptr[hub] + off])
+            fe.update_edges(remove=[(hub, nbr)], wait=True)
+            fe.query(np.arange(0, graph.n, 9))
+        stop.set()
+        for t in scrapers:
+            t.join(timeout=10)
+        assert not errors
+
+
+# --------------------------------------------- prefetch → step trace link
+
+def test_prefetcher_baton_links_upload_to_consumer():
+    from repro.pipeline.prefetch import Prefetcher
+
+    for threaded in (True, False):
+        ob = obs.reset(trace=True)
+        pf = Prefetcher(None, [0, 1, 2],
+                        fetch=lambda sid: np.zeros(2, np.float32),
+                        enabled=threaded)
+        for sid, _ops in pf:
+            ctx = trace_context.take_pending()
+            assert isinstance(ctx, TraceContext)
+            with ob.tracer.span_in(ctx, "step", sid=sid):
+                pass
+        evs = [e for e in ob.tracer.snapshot() if e.get("trace")]
+        by_trace: dict = {}
+        for e in evs:
+            by_trace.setdefault(e["trace"], set()).add(e["name"])
+        linked = [names for names in by_trace.values()
+                  if {"upload", "step"} <= names]
+        assert len(linked) == 3, (threaded, by_trace)
+
+
+def test_engine_step_adopts_prefetch_trace(graph):
+    """End-to-end: minibatch training with tracing on produces step spans
+    that share a trace id with the prefetch upload that fed them."""
+    from repro.pipeline import MinibatchConfig, MinibatchTrainer
+
+    obs.reset(metrics=True, trace=True)
+    cfg = MinibatchConfig(model="gcn", n_layers=2, hidden=16, epochs=2,
+                          rsc=False, n_subgraphs=4, n_buckets=1, roots=30,
+                          walk_length=3, autotune=False)
+    MinibatchTrainer(cfg, graph).train(eval_every=2)
+    evs = [e for e in obs.get_tracer().snapshot()
+           if e["kind"] == "span" and e.get("trace")]
+    by_trace: dict = {}
+    for e in evs:
+        by_trace.setdefault(e["trace"], []).append(e)
+    linked = 0
+    for spans in by_trace.values():
+        names = {e["name"] for e in spans}
+        if {"upload", "step"} <= names:
+            assert len({e["tid"] for e in spans}) >= 2
+            linked += 1
+    assert linked >= 4          # at least one epoch's worth of batches
